@@ -1,0 +1,53 @@
+"""Server-side aggregation cost: the paper's 'no extra cost' claim (C4)
+plus our beyond-paper factored-SVD speedup.
+
+Measures, per aggregation round at RoBERTa-large scale (d=1024, K=20,
+r_max=8, 24 layers):
+  - naive separate averaging (Eq. 1 baseline),
+  - HLoRA dense reconstruct + exact SVD (the paper as written),
+  - HLoRA dense reconstruct + randomized SVD (TPU-friendly),
+  - HLoRA factored reconstruct + factored SVD (ours — never forms ΔW).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import aggregate as agg
+
+
+def _stacked(key, k=20, layers=24, d_in=1024, d_out=1024, r=8):
+    ks = jax.random.split(key, 3)
+    return {
+        "A": jax.random.normal(ks[0], (k, layers, d_in, r)),
+        "B": jax.random.normal(ks[1], (k, layers, r, d_out)),
+        "mask": jnp.ones((k, layers, r)),
+    }
+
+
+def run(quick=False):
+    layers = 6 if quick else 24
+    key = jax.random.PRNGKey(0)
+    st = _stacked(key, layers=layers)
+    eta = jnp.ones((st["A"].shape[0],))
+    alpha = 16.0
+
+    naive = jax.jit(lambda s, e: agg.aggregate_naive(s, e))
+    us = time_fn(naive, st, eta)
+    emit("server/naive_avg", us, f"layers={layers}")
+
+    results = {"naive": us}
+    for method in ("exact", "randomized", "factored"):
+        fn = jax.jit(lambda s, e, m=method: agg.aggregate_hlora(
+            s, e, alpha, method=m, key=jax.random.PRNGKey(1)))
+        us = time_fn(fn, st, eta)
+        results[method] = us
+        emit(f"server/hlora_{method}", us,
+             f"layers={layers} speedup_vs_exact="
+             f"{results.get('exact', us) / us:.2f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

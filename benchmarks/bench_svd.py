@@ -1,0 +1,57 @@
+"""SVD back-end scaling: exact LAPACK-style vs randomized subspace
+iteration vs our factored path, across the weight-matrix sizes of the
+assigned architectures (d_model 768 → 12288)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import svd
+
+SIZES = [768, 1024, 2048, 4096, 8192, 12288]
+
+
+def run(quick=False, k_clients=20, r=8):
+    sizes = SIZES[:3] if quick else SIZES
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for d in sizes:
+        big_r = k_clients * r
+        p = jax.random.normal(key, (d, big_r))
+        q = jax.random.normal(jax.random.fold_in(key, 1), (big_r, d))
+        w = p @ q
+
+        t_f = time_fn(jax.jit(lambda p_, q_: svd.svd_factored(p_, q_, r)),
+                      p, q, iters=3)
+        t_r = time_fn(jax.jit(lambda w_: svd.svd_randomized(
+            w_, r, jax.random.PRNGKey(2))), w, iters=3)
+        # Exact dense SVD grows ~d³ (154 s/call at d=8192 on this host);
+        # time it only up to d=4096 and report the cubic extrapolation.
+        if d <= 4096:
+            t_e = time_fn(jax.jit(lambda w_: svd.svd_exact(w_, r)), w,
+                          iters=1, warmup=1)
+            out["_e_ref"] = (d, t_e)  # largest measured anchors the d³ fit
+            ue, se, vte = svd.svd_exact(w, r)
+            uf, sf, _ = svd.svd_factored(p, q, r)
+            ur, sr, _ = svd.svd_randomized(w, r, jax.random.PRNGKey(2))
+            err_f = float(jnp.abs(sf - se).max() / se[0])
+            err_r = float(jnp.abs(sr - se).max() / se[0])
+            tag = ""
+        else:
+            d0, t0 = out["_e_ref"]
+            t_e = t0 * (d / d0) ** 3
+            err_f = err_r = float("nan")
+            tag = " (exact extrapolated d^3)"
+        out[d] = dict(exact=t_e, randomized=t_r, factored=t_f)
+        emit(f"svd/d={d}/exact", t_e, f"err=0{tag}")
+        emit(f"svd/d={d}/randomized", t_r,
+             f"err={err_r:.2e} speedup={t_e / t_r:.1f}x{tag}")
+        emit(f"svd/d={d}/factored", t_f,
+             f"err={err_f:.2e} speedup={t_e / t_f:.1f}x{tag}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

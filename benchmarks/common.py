@@ -1,0 +1,24 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

@@ -1,0 +1,72 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+
+  convergence   bench_convergence — Fig. 3 curves + Table 1 accuracies
+  bias          bench_bias        — Eq. 1 aggregation bias, measured
+  server        bench_server      — aggregation strategy cost
+  comm          bench_comm        — per-round communication volume (C4)
+  svd           bench_svd         — SVD back-end scaling
+  roofline      bench_roofline    — 3-term roofline from the dry-run
+
+Output: CSV lines ``name,us_per_call,derived`` + markdown tables,
+mirrored to results/bench_results.json.
+
+  PYTHONPATH=src python -m benchmarks.run [--only svd,comm] [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks import (bench_bias, bench_comm, bench_convergence,
+                        bench_roofline, bench_server, bench_svd)
+
+ALL = ("convergence", "bias", "server", "comm", "svd", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dryrun-jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--out", default="results/bench_results.json")
+    args = ap.parse_args()
+    which = ALL if args.only == "all" else tuple(args.only.split(","))
+    results = {}
+    t0 = time.time()
+
+    print("name,us_per_call,derived")
+    if "comm" in which:
+        results["comm"] = bench_comm.run(quick=args.quick)
+    if "svd" in which:
+        results["svd"] = bench_svd.run(quick=args.quick)
+    if "server" in which:
+        results["server"] = bench_server.run(quick=args.quick)
+    if "bias" in which:
+        results["bias"] = bench_bias.run(quick=args.quick)
+    if "roofline" in which:
+        rows = bench_roofline.run(args.dryrun_jsonl, quick=args.quick)
+        results["roofline"] = rows
+        print("\n## Roofline (single-pod 16x16)\n")
+        print(bench_roofline.markdown_table(rows, "16x16"))
+        print("\n## Collective bytes: paper-faithful baseline vs optimized"
+              " (§Perf)\n")
+        print(bench_roofline.compare())
+    if "convergence" in which:
+        conv = bench_convergence.run(quick=args.quick)
+        results["convergence"] = conv
+        print("\n## Table 1 reproduction (accuracy %, mean over seeds)\n")
+        print(bench_convergence.table1(conv))
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

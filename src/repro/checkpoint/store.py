@@ -1,0 +1,92 @@
+"""Checkpointing: pytrees -> .npz with '/'-joined key paths + JSON metadata.
+
+Layout:  <dir>/step_<n>/arrays.npz, meta.json. ``restore`` rebuilds the
+exact nested-dict structure (bfloat16 round-trips via a uint16 view since
+NumPy has no native bf16).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16_TAG = "__bf16__"
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.update(_flatten(tree[k], f"{prefix}{k}/"))
+        return out
+    out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+def save_pytree(path: str, tree) -> None:
+    flat = _flatten(jax.device_get(tree))
+    arrays = {}
+    for k, v in flat.items():
+        v = np.asarray(v)
+        if v.dtype == jnp.bfloat16:
+            arrays[k + _BF16_TAG] = v.view(np.uint16)
+        else:
+            arrays[k] = v
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str):
+    data = np.load(path)
+    flat = {}
+    for k in data.files:
+        v = data[k]
+        if k.endswith(_BF16_TAG):
+            flat[k[: -len(_BF16_TAG)]] = v.view(jnp.bfloat16)
+        else:
+            flat[k] = v
+    return _unflatten(flat)
+
+
+def save(ckpt_dir: str, step: int, tree, meta: Optional[dict] = None) -> str:
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    save_pytree(os.path.join(d, "arrays.npz"), tree)
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+    return d
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for n in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)$", n))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: Optional[int] = None) -> Tuple[Any, dict]:
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tree = load_pytree(os.path.join(d, "arrays.npz"))
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    return tree, meta

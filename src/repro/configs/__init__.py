@@ -1,0 +1,16 @@
+from repro.configs.base import (
+    ARCH_IDS,
+    INPUT_SHAPES,
+    InputShape,
+    LoRAConfig,
+    ModelConfig,
+    canonical,
+    get_config,
+    get_reduced,
+    list_archs,
+)
+
+__all__ = [
+    "ARCH_IDS", "INPUT_SHAPES", "InputShape", "LoRAConfig", "ModelConfig",
+    "canonical", "get_config", "get_reduced", "list_archs",
+]

@@ -1,0 +1,34 @@
+"""Hymba-1.5B [hybrid] — parallel attention + mamba heads [arXiv:2411.13676].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Hymba fuses attention and SSM heads *in parallel* within each block; most
+layers use sliding-window attention (we use a 2k window) so long-context
+decode is sub-quadratic.
+"""
+from repro.configs.base import LoRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    sliding_window=2048,
+    activation="silu",
+    lora=LoRAConfig(targets=("q", "k", "v", "o", "ssm_in", "ssm_out")),
+    source="arXiv:2411.13676",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_(
+        name="hymba-reduced", num_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=2, head_dim=32, d_ff=256, vocab_size=256,
+        ssm_state=16, ssm_head_dim=32, sliding_window=64)

@@ -1,0 +1,33 @@
+"""Whisper-small [audio] — encoder-decoder, conv frontend STUB [arXiv:2212.04356].
+
+12L (decoder) + 12L encoder, d_model=768 12H d_ff=3072 vocab=51865.
+Per spec, the mel-spectrogram + conv feature extractor is a stub:
+input_specs() provides precomputed frame embeddings (batch, 1500, 768).
+"""
+from repro.configs.base import LoRAConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    arch_type="audio",
+    num_layers=12,
+    encoder_layers=12,
+    encoder_seq=1500,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=51865,
+    activation="gelu",
+    use_bias=True,
+    rope_theta=0.0,  # whisper uses learned/sinusoidal positions, not RoPE
+    lora=LoRAConfig(targets=("q", "v")),  # whisper-LoRA convention
+    source="arXiv:2212.04356",
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG.with_(
+        name="whisper-reduced", num_layers=2, encoder_layers=2,
+        encoder_seq=32, d_model=128, num_heads=4, num_kv_heads=4,
+        head_dim=32, d_ff=256, vocab_size=256)

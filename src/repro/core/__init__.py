@@ -1,0 +1,5 @@
+"""HLoRA core: LoRA adapters with heterogeneous ranks, server aggregation
+(naive / zero-pad / HLoRA reconstruct+SVD), rank policies."""
+from repro.core import aggregate, lora, rank, svd
+
+__all__ = ["aggregate", "lora", "rank", "svd"]

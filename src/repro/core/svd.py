@@ -1,0 +1,104 @@
+"""SVD back-ends for HLoRA's server-side re-decomposition (Eq. 3).
+
+Three implementations, trading exactness vs TPU-friendliness:
+
+- ``svd_exact``      — ``jnp.linalg.svd`` on the dense (d_in × d_out) ΔW.
+                       The oracle. On TPU this is host-bound / emulated;
+                       kept as reference and for tests.
+- ``svd_factored``   — **exact** SVD exploiting that the HLoRA aggregate
+                       ``ΔW' = Σ_k η_k A_k B_k`` has rank ≤ R = Σ_k r_k ≪ d.
+                       QR the stacked tall-skinny factors and SVD only the
+                       R×R core: O(d R²) matmul work, MXU-friendly.
+                       This is the production server path (beyond-paper).
+- ``svd_randomized`` — Halko-style subspace iteration for a dense W when no
+                       factored form exists (e.g. aggregating *merged*
+                       checkpoints). Approximate, all-matmul.
+
+All return ``(U, s, Vt)`` with shapes (d_in, r), (r,), (r, d_out).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def svd_exact(w: jax.Array, r: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    u, s, vt = jnp.linalg.svd(w, full_matrices=False)
+    return u[..., :, :r], s[..., :r], vt[..., :r, :]
+
+
+def svd_factored(
+    p: jax.Array, q: jax.Array, r: int
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact top-r SVD of ``p @ q`` without forming it.
+
+    p: (d_in, R), q: (R, d_out) with R ≪ d_in, d_out.
+    QR(p) = Qp Rp ; QR(qᵀ) = Qq Rq ; SVD(Rp Rqᵀ) = Û s V̂ᵀ (R×R, cheap);
+    U = Qp Û, Vᵀ = (Qq V̂)ᵀ.
+    """
+    qp, rp = jnp.linalg.qr(p, mode="reduced")          # (d_in,R), (R,R)
+    qq, rq = jnp.linalg.qr(q.T, mode="reduced")        # (d_out,R), (R,R)
+    core = rp @ rq.T                                    # (R,R)
+    uu, s, vvt = jnp.linalg.svd(core, full_matrices=False)
+    u = qp @ uu
+    vt = (qq @ vvt.T).T
+    return u[:, :r], s[:r], vt[:r, :]
+
+
+@partial(jax.jit, static_argnames=("r", "oversample", "iters"))
+def svd_randomized(
+    w: jax.Array,
+    r: int,
+    key: jax.Array,
+    oversample: int = 8,
+    iters: int = 2,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Randomized range-finder + subspace iteration (Halko et al. 2011).
+
+    Exact (to float precision) when rank(w) ≤ r + oversample, which holds
+    for HLoRA aggregates with Σ r_k ≤ r + oversample; otherwise the error
+    is bounded by the (r+1)-th singular value. Pure matmul + tall-skinny
+    QR — the TPU-native replacement for a LAPACK SVD (DESIGN.md §3).
+    """
+    d_in, d_out = w.shape
+    l = min(r + oversample, min(d_in, d_out))
+    omega = jax.random.normal(key, (d_out, l), w.dtype)
+    y = w @ omega                                       # (d_in, l)
+    # Power/subspace iteration with re-orthonormalization for stability.
+    def body(y, _):
+        q, _r = jnp.linalg.qr(y, mode="reduced")
+        z = w.T @ q                                     # (d_out, l)
+        qz, _r2 = jnp.linalg.qr(z, mode="reduced")
+        return w @ qz, None
+    y, _ = jax.lax.scan(body, y, None, length=iters)
+    q, _ = jnp.linalg.qr(y, mode="reduced")             # (d_in, l)
+    b = q.T @ w                                         # (l, d_out)
+    ub, s, vt = jnp.linalg.svd(b, full_matrices=False)
+    u = q @ ub
+    return u[:, :r], s[:r], vt[:r, :]
+
+
+def split_factors(
+    u: jax.Array, s: jax.Array, vt: jax.Array, r: int, split: str = "paper"
+) -> Tuple[jax.Array, jax.Array]:
+    """Truncate to rank r and split into (A', B') per Eq. 3.
+
+    'paper':  A' = U_r            B' = Σ_r V_rᵀ   (paper's B'=U, A'=ΣVᵀ,
+              transposed into our row-vector convention — see lora.py)
+    'sqrt':   A' = U_r √Σ_r       B' = √Σ_r V_rᵀ  (balanced; beyond-paper)
+    """
+    u_r, s_r, vt_r = u[..., :, :r], s[..., :r], vt[..., :r, :]
+    if split == "paper":
+        return u_r, s_r[..., :, None] * vt_r
+    if split == "sqrt":
+        sq = jnp.sqrt(jnp.maximum(s_r, 0.0))
+        return u_r * sq[..., None, :], sq[..., :, None] * vt_r
+    raise ValueError(f"unknown split {split!r}")
+
+
+def truncation_error(w: jax.Array, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Relative Frobenius error ‖W − AB‖_F / ‖W‖_F."""
+    return jnp.linalg.norm(w - a @ b) / jnp.maximum(jnp.linalg.norm(w), 1e-30)

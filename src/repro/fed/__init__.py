@@ -1,0 +1,12 @@
+from repro.fed.async_server import (AsyncConfig, AsyncFedServer,
+                                    simulate_async_rounds)
+from repro.fed.client import (join_adapters, make_cohort_train,
+                              make_local_train, split_adapters)
+from repro.fed.server import FedServer, ServerConfig
+from repro.fed.simulation import (SimConfig, rounds_to_target,
+                                  run_centralized, run_experiment)
+
+__all__ = ["FedServer", "ServerConfig", "SimConfig", "run_experiment",
+           "run_centralized", "rounds_to_target", "make_local_train",
+           "make_cohort_train", "split_adapters", "join_adapters",
+           "AsyncFedServer", "AsyncConfig", "simulate_async_rounds"]

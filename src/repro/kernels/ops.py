@@ -1,0 +1,59 @@
+"""jit'd public wrappers around the Pallas kernels, with shape padding and
+CPU-interpret fallbacks. These are what the rest of the system calls."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attn import flash_attention as _flash
+from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
+from repro.kernels.recon_agg import recon_agg as _recon_agg
+
+_ON_TPU = None
+
+
+def on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.default_backend() == "tpu"
+    return _ON_TPU
+
+
+def _pad_rank(a: jax.Array, b: jax.Array, lanes: int = 128):
+    """Zero-pad the rank axis to the TPU lane width (extra directions
+    contribute exactly zero)."""
+    r = a.shape[-1]
+    if r >= lanes:
+        return a, b
+    pad = lanes - r
+    a = jnp.pad(a, [(0, 0)] * (a.ndim - 1) + [(0, pad)])
+    b = jnp.pad(b, [(0, 0)] * (b.ndim - 2) + [(0, pad), (0, 0)])
+    return a, b
+
+
+def lora_matmul(x, w0, a, b, scale: float = 1.0, *,
+                interpret: Optional[bool] = None, **blocks):
+    """Fused y = x @ W0 + scale (x A) B; kernel when shapes tile, ref
+    otherwise."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    a, b = _pad_rank(a, b)
+    return _lora_matmul(x, w0, a, b, scale, interpret=interpret, **blocks)
+
+
+def recon_agg(a, b, eta, *, interpret: Optional[bool] = None, **blocks):
+    """W' = Σ_k η_k A_k B_k (server aggregation, Eq. 2)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    a, b = _pad_rank(a, b)
+    return _recon_agg(a, b, eta, interpret=interpret, **blocks)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    interpret: Optional[bool] = None, **blocks):
+    """Batched flash attention: q (B,Sq,H,D), k/v (B,Skv,H,D)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    fn = lambda q_, k_, v_: _flash(q_, k_, v_, causal=causal, window=window,
+                                   interpret=interpret, **blocks)
+    return jax.vmap(fn)(q, k, v)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x: jax.Array, w0: jax.Array, a: jax.Array, b: jax.Array,
+                    scale: float) -> jax.Array:
+    """y = x @ W0 + scale · (x @ A) @ B.
+    x: (M, K), w0: (K, N), a: (K, R), b: (R, N)."""
+    return x @ w0 + scale * ((x @ a) @ b)
+
+
+def recon_agg_ref(a: jax.Array, b: jax.Array, eta: jax.Array) -> jax.Array:
+    """W' = Σ_k η_k · A_k B_k.
+    a: (Kc, d_in, r), b: (Kc, r, d_out), eta: (Kc,)."""
+    return jnp.einsum("k,kir,kro->io", eta, a, b)
+
+
+def flash_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Masked softmax attention. q: (Sq, H, D), k/v: (Skv, H, D) —
+    single batch element; batch via vmap."""
+    sq, h, d = q.shape
+    skv = k.shape[0]
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("qhd,khd->hqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kpos <= qpos + (skv - sq)   # q may be a suffix of kv
+    if window is not None:
+        mask &= kpos > qpos + (skv - sq) - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,350 @@
+"""Multi-pod dry-run: prove every (architecture × input shape × mesh)
+lowers AND compiles under the production sharding config.
+
+For each combination we build abstract params/optimizer/cache trees
+(jax.eval_shape — zero allocation), jit the step with explicit
+NamedShardings, ``.lower().compile()``, and record:
+  - memory_analysis (per-device argument/output/temp bytes),
+  - cost_analysis (per-device HLO FLOPs + bytes accessed),
+  - per-collective byte totals parsed from the post-SPMD HLO,
+into a JSONL consumed by benchmarks/bench_roofline.py and EXPERIMENTS.md.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi --out results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede the jax import (jax locks device count on first init).
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES
+from repro.fed.client import join_adapters
+from repro.launch.inputs import (abstract_cache, abstract_params, config_for,
+                                 input_specs, skip_reason)
+from repro.launch.mesh import make_production_mesh, num_chips
+from repro.launch.sharding import batch_pspecs, cache_pspecs, param_pspecs
+from repro.models import model as model_lib
+from repro.optim import adamw
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every dtype[shape] group in an HLO result type."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COLL_RE = re.compile(
+    r"%?[\w.\-]+\s*=\s*(.+?)\s+(" + "|".join(_COLLECTIVES) + r")\(")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(\([^)]*\))?.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """{name: [lines]} per HLO computation; 'ENTRY' key for the entry."""
+    comps, cur, name, entry = {}, None, None, None
+    for line in hlo_text.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(s.strip())
+            if m and "->" in s:
+                name = m.group(2)
+                if m.group(1):
+                    entry = name
+                cur = []
+                comps[name] = cur
+        else:
+            if s.strip() == "}":
+                cur = None
+            else:
+                cur.append(s)
+    return comps, entry
+
+
+def parse_collectives(hlo_text: str):
+    """Per-op-kind collective result bytes (per device), with while-loop
+    bodies multiplied by their trip count (parsed from the loop condition's
+    comparison constant). XLA emits scan bodies once in the text; without
+    this correction an 88-layer model's per-layer all-gathers would be
+    undercounted 88×."""
+    comps, entry = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, ())
+                  for c in _CONST_RE.findall(line)]
+        big = [c for c in consts if c > 1]
+        return max(big) if big else 1
+
+    def eff(comp_name: str, depth=0):
+        bytes_ = {k: 0 for k in _COLLECTIVES}
+        counts = {k: 0 for k in _COLLECTIVES}
+        if depth > 8 or comp_name not in comps:
+            return bytes_, counts
+        for line in comps[comp_name]:
+            m = _COLL_RE.search(line)
+            if m:
+                bytes_[m.group(2)] += _shape_bytes(m.group(1))
+                counts[m.group(2)] += 1
+            w = _WHILE_RE.search(line)
+            if w:
+                n = trip_count(w.group(1))
+                b2, c2 = eff(w.group(2), depth + 1)
+                for k in _COLLECTIVES:
+                    bytes_[k] += n * b2[k]
+                    counts[k] += n * c2[k]
+            # calls into fusions/computations that might hold collectives
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", line):
+                b2, c2 = eff(cm.group(1), depth + 1)
+                for k in _COLLECTIVES:
+                    bytes_[k] += b2[k]
+                    counts[k] += c2[k]
+        return bytes_, counts
+
+    if entry is None:
+        # fallback: flat parse
+        out = {k: 0 for k in _COLLECTIVES}
+        counts = {k: 0 for k in _COLLECTIVES}
+        for line in hlo_text.splitlines():
+            m = _COLL_RE.search(line)
+            if m:
+                out[m.group(2)] += _shape_bytes(m.group(1))
+                counts[m.group(2)] += 1
+        return out, counts
+    return eff(entry)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg):
+    opt = adamw(3e-4)
+
+    def train_step(base, factors, masks, opt_state, batch):
+        def loss(f):
+            params = {**base, "lora": join_adapters(f, masks)}
+            l, _ = model_lib.loss_fn(params, batch, cfg, remat=True)
+            return l
+
+        l, g = jax.value_and_grad(loss)(factors)
+        updates, opt_state = opt.update(g, opt_state, factors)
+        factors2 = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                factors, updates)
+        return factors2, opt_state, l
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg):
+    def prefill(params, batch):
+        logits, _ = model_lib.forward(params, batch, cfg, remat=False)
+        return logits
+    return prefill
+
+
+def make_decode_step(cfg):
+    def serve_step(params, cache, token, pos):
+        return model_lib.decode_step(params, cache, token, pos, cfg)
+    return serve_step
+
+
+def split_lora(params):
+    lora = params["lora"]
+    base = {k: v for k, v in params.items() if k != "lora"}
+    factors = {t: {"A": ad["A"], "B": ad["B"]} for t, ad in lora.items()}
+    masks = {t: ad["mask"] for t, ad in lora.items()}
+    return base, factors, masks
+
+
+# ---------------------------------------------------------------------------
+# One combination
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            extra_note: str = "", hints: bool = False,
+            mesh_shape=None) -> dict:
+    shape = INPUT_SHAPES[shape_name]
+    cfg, note = config_for(arch, shape)
+    mesh_name = ("x".join(map(str, mesh_shape)) if mesh_shape
+                 else ("2x16x16" if multi_pod else "16x16"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "variant": note + extra_note + ("+hints" if hints else ""),
+           "status": "ok"}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skip"
+        rec["skip_reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    rec["chips"] = num_chips(mesh)
+    from repro.launch.mesh import fsdp_axes
+    from repro.models import shard_hints
+    if hints:
+        fsdp = fsdp_axes(mesh)
+        bsize = 1
+        for a in fsdp:
+            bsize *= mesh.shape[a]
+        shard_hints.enable(fsdp if len(fsdp) > 1 else fsdp[0], "model",
+                           mesh.shape["model"], bsize)
+    else:
+        shard_hints.disable()
+    t0 = time.time()
+
+    params = abstract_params(cfg)
+    pspecs = param_pspecs(params, cfg, mesh)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        step, opt = make_train_step(cfg)
+        base, factors, masks = split_lora(params)
+        base_ps, lora_ps = (lambda t: ({k: v for k, v in t.items() if k != "lora"},
+                                       t["lora"]))(pspecs)
+        f_ps = {t: {"A": ad["A"], "B": ad["B"]} for t, ad in lora_ps.items()}
+        m_ps = {t: ad["mask"] for t, ad in lora_ps.items()}
+        opt_state = jax.eval_shape(opt.init, factors)
+        # adamw state mirrors the factor tree: mu/nu + scalar step
+        opt_ps = {"mu": f_ps, "nu": f_ps, "step": P()}
+        batch = input_specs(cfg, shape)
+        b_ps = batch_pspecs(batch, cfg, mesh, shape.global_batch)
+        jitted = jax.jit(step, in_shardings=(
+            ns(base_ps), ns(f_ps), ns(m_ps), ns(opt_ps), ns(b_ps)))
+        args = (base, factors, masks, opt_state, batch)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        batch = input_specs(cfg, shape)
+        b_ps = batch_pspecs(batch, cfg, mesh, shape.global_batch)
+        jitted = jax.jit(step, in_shardings=(ns(pspecs), ns(b_ps)))
+        args = (params, batch)
+    else:  # decode
+        step = make_decode_step(cfg)
+        cache = abstract_cache(cfg, shape)
+        c_ps = cache_pspecs(cache, cfg, mesh, shape.global_batch)
+        inp = input_specs(cfg, shape)
+        tok_ps = batch_pspecs({"token": inp["token"]}, cfg, mesh,
+                              shape.global_batch)["token"]
+        jitted = jax.jit(step, in_shardings=(
+            ns(pspecs), ns(c_ps), NamedSharding(mesh, tok_ps),
+            NamedSharding(mesh, P())))
+        args = (params, cache, inp["token"], inp["pos"])
+
+    with mesh:  # mesh context: with_sharding_constraint hints resolve here
+        lowered = jitted.lower(*args)
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                rec[attr.replace("_size_in_bytes", "_bytes")] = int(v)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0] if cost else {}
+    if cost:
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+        rec["transcendentals"] = float(cost.get("transcendentals", 0.0))
+    coll, counts = parse_collectives(compiled.as_text())
+    rec["collective_bytes"] = coll
+    rec["collective_counts"] = counts
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--hints", action="store_true",
+                    help="enable in-model sharding hints (optimized variant)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="override (data,model) split, e.g. 64x4 — §Perf "
+                         "mesh-reassignment knob; chips must total 256/512")
+    ap.add_argument("--skip-done", action="store_true",
+                    help="skip combos already in --out")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    shapes = (list(INPUT_SHAPES) if args.shape == "all"
+              else args.shape.split(","))
+    meshes = [m == "multi" for m in args.mesh.split(",")]
+
+    done = set()
+    if args.skip_done and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    meshname = "2x16x16" if mp else "16x16"
+                    if (arch, shape, meshname) in done:
+                        continue
+                    t0 = time.time()
+                    try:
+                        ms = (tuple(int(x) for x in args.mesh_shape.split("x"))
+                              if args.mesh_shape else None)
+                        rec = run_one(arch, shape, mp, hints=args.hints,
+                                      mesh_shape=ms)
+                    except Exception as e:
+                        rec = {"arch": arch, "shape": shape, "mesh": meshname,
+                               "status": "error",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:],
+                               "total_s": round(time.time() - t0, 2)}
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    msg = rec.get("skip_reason") or rec.get("error", "")[:120] \
+                        or f"compile={rec.get('compile_s')}s flops/dev={rec.get('flops_per_device', 0):.3g}"
+                    print(f"[{rec['status']:5s}] {arch} × {shape} × {meshname}: {msg}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""HLO collective inspector — the dry-run 'profiler' (§Perf tooling).
+
+Lists the top collective ops of a compiled (arch × shape × mesh) combo:
+kind, result shape, per-execution bytes, loop trip multiplier, total
+bytes, and the op-name metadata hint (which model op produced it).
+
+  PYTHONPATH=src python -m repro.launch.inspect_hlo --arch gemma_2b \
+      --shape train_4k [--multi-pod] [--top 25]
+"""
+from __future__ import annotations
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+
+from repro.launch.dryrun import (_COLL_RE, _CONST_RE, _WHILE_RE, _shape_bytes,
+                                 _split_computations)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def collect_ops(hlo_text: str):
+    comps, entry = _split_computations(hlo_text)
+
+    def trip_count(cond_name: str) -> int:
+        consts = [int(c) for line in comps.get(cond_name, ())
+                  for c in _CONST_RE.findall(line)]
+        big = [c for c in consts if c > 1]
+        return max(big) if big else 1
+
+    ops = []
+
+    def walk(comp_name: str, mult: int, depth=0):
+        if depth > 8 or comp_name not in comps:
+            return
+        for line in comps[comp_name]:
+            m = _COLL_RE.search(line)
+            if m:
+                per = _shape_bytes(m.group(1))
+                meta = _META_RE.search(line)
+                hint = meta.group(1)[-90:] if meta else ""
+                ops.append({
+                    "kind": m.group(2), "shape": m.group(1)[:60],
+                    "per_bytes": per, "trips": mult,
+                    "total": per * mult, "hint": hint,
+                })
+            w = _WHILE_RE.search(line)
+            if w:
+                walk(w.group(2), mult * trip_count(w.group(1)), depth + 1)
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", line):
+                walk(cm.group(1), mult, depth + 1)
+
+    walk(entry, 1)
+    return ops
+
+
+def inspect(arch: str, shape: str, multi_pod: bool, top: int = 25,
+            hints: bool = False):
+    from repro.launch.dryrun import run_one  # noqa: circular-safe
+    import repro.launch.dryrun as dr
+    # run_one compiles; re-do the compile here to grab the text
+    import jax
+    from repro.configs.base import INPUT_SHAPES
+    # Reuse run_one's plumbing by monkey-grabbing compiled text: simplest is
+    # to replicate the small amount of glue:
+    shape_obj = INPUT_SHAPES[shape]
+    from repro.launch.inputs import config_for, skip_reason
+    cfg, note = config_for(arch, shape_obj)
+    if skip_reason(cfg, shape_obj):
+        print("skipped combo"); return []
+    rec, text = _compile_with_text(arch, shape, multi_pod, hints)
+    ops = collect_ops(text)
+    ops.sort(key=lambda o: -o["total"])
+    total = sum(o["total"] for o in ops)
+    print(f"# {arch} × {shape} × {'2x16x16' if multi_pod else '16x16'}   "
+          f"total collective bytes/device: {total/1e9:.2f} GB")
+    print(f"{'kind':18s} {'total':>10s} {'per-exec':>10s} {'trips':>6s}  "
+          f"shape / origin")
+    for o in ops[:top]:
+        print(f"{o['kind']:18s} {o['total']/1e9:9.3f}G {o['per_bytes']/1e6:8.2f}M "
+              f"{o['trips']:6d}  {o['shape']}  <- {o['hint']}")
+    return ops
+
+
+def _compile_with_text(arch, shape, multi_pod, hints=False):
+    """Compile like run_one but return (record, hlo_text)."""
+    import repro.launch.dryrun as dr
+    orig = dr.parse_collectives
+    captured = {}
+
+    def spy(text):
+        captured["text"] = text
+        return orig(text)
+
+    dr.parse_collectives = spy
+    try:
+        rec = dr.run_one(arch, shape, multi_pod, hints=hints)
+    finally:
+        dr.parse_collectives = orig
+    return rec, captured.get("text", "")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--hints", action="store_true")
+    a = ap.parse_args()
+    inspect(a.arch, a.shape, a.multi_pod, a.top, a.hints)

@@ -1,0 +1,147 @@
+"""GSPMD sharding rules: param/cache/batch pytrees -> PartitionSpec trees.
+
+2D sharding: weights are FSDP-sharded over ('pod','data') on d_in and
+tensor-parallel over 'model' on d_out (reversed for output projections so
+the contraction dimension stays sharded). LoRA factors: A is FSDP on d_in,
+B is TP on d_out — matching the base matmul they ride along.
+
+Rules are name-based over tree paths; anything unmatched is replicated.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import fsdp_axes
+
+# weight name -> (d_in axis sharding, d_out axis sharding) relative to the
+# trailing two dims; 'F' = fsdp axes, 'M' = model axis.
+_IN_OUT = {
+    "wq": ("F", "M"), "wk": ("F", "M"), "wv": ("F", "M"),
+    "w1": ("F", "M"), "w3": ("F", "M"), "in_proj": ("F", "M"),
+    "wo": ("M", "F"), "w2": ("M", "F"), "out_proj": ("M", "F"),
+    "lm_head": ("F", "M"), "cls_head": ("F", None), "router": ("F", None),
+}
+
+
+def _axis(tag, fsdp):
+    if tag == "F":
+        return fsdp if len(fsdp) > 1 else fsdp[0]
+    if tag == "M":
+        return "model"
+    return None
+
+
+def _fit(spec: P, shape, mesh) -> P:
+    """Drop sharded axes on dims they don't divide (pjit arguments must
+    shard evenly; e.g. vocab 50280 is not divisible by 16)."""
+    dims = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            dims.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        dims.append(entry if shape[i] % size == 0 else None)
+    return P(*dims)
+
+
+def _spec_for(path: Tuple[str, ...], leaf, cfg: ModelConfig, fsdp) -> P:
+    name = path[-1]
+    ndim = leaf.ndim
+    lead = (None,) * (ndim - 2)  # stacked layer axes etc.
+
+    if name in ("A",):            # LoRA: (L, d_in, r) — REPLICATED: tiny,
+        # and fsdp-sharding d_in misaligns the xA contraction with the
+        # model-sharded activations (§Perf iteration 2)
+        return P(*((None,) * ndim))
+    if name in ("B",):            # LoRA: (L, r, d_out)
+        return P(*lead, None, "model")
+    if name == "mask":
+        return P(*((None,) * ndim))
+    if name == "embed":           # (V, d)
+        return P("model", _axis("F", fsdp))
+    if name in ("we1", "we3"):    # (L, E, d, ff): expert-parallel + fsdp
+        return P(None, "model", _axis("F", fsdp), None)
+    if name == "we2":             # (L, E, ff, d)
+        return P(None, "model", None, _axis("F", fsdp))
+    if name in _IN_OUT and ndim >= 2:
+        i, o = _IN_OUT[name]
+        return P(*lead, _axis(i, fsdp), _axis(o, fsdp))
+    # biases, norms, A_log, D, dt_bias, conv_w, cls_bias ... replicated
+    return P(*((None,) * ndim))
+
+
+def param_pspecs(params, cfg: ModelConfig, mesh):
+    fsdp = fsdp_axes(mesh)
+
+    def per_leaf(path, leaf):
+        keys = tuple(p.key for p in path if hasattr(p, "key"))
+        return _fit(_spec_for(keys, leaf, cfg, fsdp), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+def batch_pspecs(batch, cfg: ModelConfig, mesh, global_batch: int):
+    """tokens/labels (B, S) [+ frames (B, S_enc, d)]: shard batch over fsdp
+    when divisible, else replicate."""
+    fsdp = fsdp_axes(mesh)
+    size = 1
+    for a in fsdp:
+        size *= mesh.shape[a]
+    baxis = (fsdp if len(fsdp) > 1 else fsdp[0]) if global_batch % size == 0 \
+        else None
+
+    def per_leaf(leaf):
+        return _fit(P(baxis, *((None,) * (leaf.ndim - 1))), leaf.shape, mesh)
+
+    return jax.tree.map(per_leaf, batch)
+
+
+def cache_pspecs(cache, cfg: ModelConfig, mesh, batch: int):
+    """KV caches (L,B,S,H,D), pos (L,B,S), ssm state (L,B,H,P,N), conv
+    (L,B,W,C). Batch over fsdp when divisible; heads (or seq for MQA)
+    over 'model'."""
+    fsdp = fsdp_axes(mesh)
+    size = 1
+    for a in fsdp:
+        size *= mesh.shape[a]
+    baxis = (fsdp if len(fsdp) > 1 else fsdp[0]) if batch % size == 0 else None
+    m = mesh.shape["model"]
+    kv_on_heads = cfg.num_kv_heads > 0 and cfg.num_kv_heads % m == 0
+
+    def per_leaf(path, leaf):
+        keys = tuple(p.key for p in path if hasattr(p, "key"))
+        name = keys[-1]
+        if name in ("k", "v"):            # (L, B, S, Hkv, Dh)
+            if kv_on_heads:
+                return P(None, baxis, None, "model", None)
+            return P(None, baxis, "model", None, None)
+        if name == "pos":                 # (L, B, S)
+            if kv_on_heads:
+                return P(None, baxis, None)
+            return P(None, baxis, "model")
+        if name == "state":               # (L, B, H, P, N)
+            return P(None, baxis, "model", None, None)
+        if name == "conv":                # (L, B, W-1, C)
+            return P(None, baxis, None, "model")
+        if name in ("cross_k", "cross_v"):  # (L, B, S_enc, Hkv, Dh)
+            if kv_on_heads:
+                return P(None, baxis, None, "model", None)
+            return P(None, baxis, "model", None, None)
+        return P(*((None,) * leaf.ndim))
+
+    def fitted(path, leaf):
+        return _fit(per_leaf(path, leaf), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(fitted, cache)
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+from repro.models import model
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_params, loss_fn)
+
+__all__ = ["model", "decode_step", "forward", "init_cache", "init_params",
+           "loss_fn"]

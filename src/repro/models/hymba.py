@@ -1,0 +1,115 @@
+"""Hymba (arXiv:2411.13676): hybrid blocks with attention and mamba heads
+in PARALLEL on the same normed input, outputs averaged — plus an MLP.
+Sliding-window attention keeps long-context decode sub-quadratic; the SSM
+path carries unlimited context in its state.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2 as ssm_lib
+from repro.models import transformer as tf_lib
+from repro.models.common import (attention, cache_insert, init_kv_cache,
+                                 mlp, out_proj, qkv_proj, rope,
+                                 stacked_dense_init)
+from repro.models.transformer import norm
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    L, d = cfg.num_layers, cfg.d_model
+    ks = jax.random.split(key, 6)
+    layers = {
+        "ln1": tf_lib._norm_init(L, d, cfg.use_bias, dtype),
+        "attn": tf_lib._init_attn(ks[0], cfg, L, dtype),
+        "ssm": ssm_lib.init_ssm_params(ks[1], cfg, L, dtype),
+        "ln2": tf_lib._norm_init(L, d, cfg.use_bias, dtype),
+        "mlp": tf_lib._init_mlp(ks[2], cfg, L, dtype),
+    }
+    return {
+        "embed": (jax.random.normal(ks[3], (cfg.vocab_size, d)) * 0.02).astype(dtype),
+        "layers": layers,
+        "final_norm": tf_lib._norm_init(0, d, cfg.use_bias, dtype),
+        "lm_head": tf_lib.dense_init(ks[4], d, cfg.vocab_size, dtype),
+        "lora": tf_lib.init_lora(ks[5], cfg),
+    }
+
+
+def hybrid_layer(x, lp, ad, cfg: ModelConfig, *, positions, q_chunk=1024):
+    from repro.models import shard_hints
+    x = shard_hints.constrain_tokens(x, x.shape[0])
+    h = norm(x, lp["ln1"])
+    # -- parallel heads: attention ∥ SSD, averaged (hymba block structure)
+    q, k, v = qkv_proj(h, lp["attn"], cfg, ad)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    att = attention(q, k, v, causal=True, window=cfg.sliding_window,
+                    q_chunk=q_chunk)
+    att = out_proj(att, lp["attn"], cfg, ad)
+    ssm = ssm_lib.mamba_mixer(h, lp["ssm"], cfg, ad)
+    x = x + 0.5 * (att + ssm)
+    y = mlp(norm(x, lp["ln2"]), lp["mlp"], cfg, ad)
+    return x + y, jnp.zeros((), jnp.float32)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, remat=True, q_chunk=1024):
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)[None, :]
+
+    def layer_fn(x, lp, ad):
+        return hybrid_layer(x, lp, ad, cfg, positions=positions, q_chunk=q_chunk)
+
+    body = jax.checkpoint(layer_fn) if remat else layer_fn
+
+    def scan_body(carry, xs):
+        lp, ad = xs
+        x, aux = body(carry, lp, ad)
+        return x, aux
+
+    x, auxs = lax.scan(scan_body, x, (params["layers"], params["lora"]))
+    x = norm(x, params["final_norm"])
+    return x @ params["lm_head"], jnp.sum(auxs)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    kv = init_kv_cache(cfg.num_layers, batch, max_seq, cfg.num_kv_heads,
+                       cfg.resolved_head_dim, window=cfg.sliding_window,
+                       dtype=dtype)
+    ssm = ssm_lib.init_ssm_cache(cfg, cfg.num_layers, batch, dtype)
+    return {"kv": kv, "ssm": ssm}
+
+
+def layer_decode(x, lp, ad, lc, pos, cfg: ModelConfig):
+    h = norm(x, lp["ln1"])
+    q, k, v = qkv_proj(h, lp["attn"], cfg, ad)
+    pvec = jnp.full((1, 1), pos, jnp.int32)
+    q = rope(q, pvec, cfg.rope_theta)
+    k = rope(k, pvec, cfg.rope_theta)
+    kvc = cache_insert(lc["kv"], k, v, pos)
+    att = attention(q, kvc["k"], kvc["v"], causal=True,
+                    window=cfg.sliding_window, q_offset=pos,
+                    kv_positions=kvc["pos"], kv_valid=kvc["pos"] >= 0)
+    att = out_proj(att, lp["attn"], cfg, ad)
+    ssm, ssmc = ssm_lib.mamba_mixer_step(h, lc["ssm"], lp["ssm"], cfg, ad)
+    x = x + 0.5 * (att + ssm)
+    y = mlp(norm(x, lp["ln2"]), lp["mlp"], cfg, ad)
+    return x + y, {"kv": kvc, "ssm": ssmc}
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    x = jnp.take(params["embed"], token, axis=0)
+
+    def scan_body(carry, xs):
+        lp, ad, lc = xs
+        x, new_lc = layer_decode(carry, lp, ad, lc, pos, cfg)
+        return x, new_lc
+
+    x, new_cache = lax.scan(
+        scan_body, x, (params["layers"], params["lora"], cache))
+    x = norm(x, params["final_norm"])
+    return x[:, 0, :] @ params["lm_head"], new_cache

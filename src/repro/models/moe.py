@@ -1,0 +1,113 @@
+"""Mixture-of-Experts FFN with grouped dense dispatch (TPU-native).
+
+Token dispatch uses the einsum/one-hot formulation (Shazeer/MaxText style):
+tokens are reshaped into groups of ``moe_group_size``; per group each token
+is routed to top-k experts with capacity ``c = g·k·cf / E``. Dispatch and
+combine are dense matmuls — no gather/scatter — so the MXU does the routing
+and GSPMD shards experts over the 'model' axis (expert parallelism).
+
+Group size is the memory/imbalance knob: the (G, g·k, E, c) dispatch tensor
+scales ∝ tokens · g · k · cf (see DESIGN.md; olmoe uses 256, llama4 1024).
+
+Returns (y, aux_loss) with the switch-transformer load-balance loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.lora import Adapter, apply_lora
+
+
+def moe_ffn(
+    x: jax.Array,                       # (B, S, d)
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    adapters: Optional[Dict[str, Adapter]] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    t = b * s
+    g = min(cfg.moe_group_size, t)
+    assert t % g == 0, f"tokens {t} not divisible by group size {g}"
+    n_groups = t // g
+    cap = max(1, int(math.ceil(g * k * cfg.moe_capacity_factor / e)))
+
+    xg = x.reshape(n_groups, g, d)
+    router_logits = jnp.einsum(
+        "gsd,de->gse", xg.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(router_logits, axis=-1)          # (G, g, E)
+    top_p, top_idx = jax.lax.top_k(probs, k)                # (G, g, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize
+
+    # Load-balance aux loss (Switch): E · Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1)) / k                                     # (E,)
+    aux = e * jnp.sum(me * ce)
+
+    # Capacity assignment: position of each (token, slot) within its expert.
+    oh = jax.nn.one_hot(top_idx, e, dtype=jnp.float32)       # (G, g, k, E)
+    ohf = oh.reshape(n_groups, g * k, e)
+    pos = jnp.sum((jnp.cumsum(ohf, axis=1) - ohf) * ohf, axis=-1)  # (G, g·k)
+    keep = (pos < cap) & (jnp.sum(ohf, axis=-1) > 0)
+    gates = top_p.reshape(n_groups, g * k) * keep
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=x.dtype) \
+        * keep[..., None].astype(x.dtype)
+
+    disp = ohf.astype(x.dtype)[..., :, None] * pos_oh[..., None, :]  # (G,gk,E,c)
+    xk = jnp.repeat(xg, k, axis=1)                                   # (G, g·k, d)
+    xe = jnp.einsum("gtec,gtd->egcd", disp, xk)                      # (E,G,c,d)
+    from repro.models import shard_hints
+    # EP×DP anchor (§Perf): pays off when the dispatch tensor is large
+    # (train/prefill); at decode token counts it costs an extra expert
+    # gather, so gate on volume.
+    anchor_moe = t > 4096
+    if anchor_moe:
+        xe = shard_hints.constrain_expert_major(xe)
+
+    # Per-expert gated FFN (experts stacked on the sharded leading axis).
+    h = jnp.einsum("egcd,edf->egcf", xe, p["we1"])
+    h = jax.nn.silu(h) * jnp.einsum("egcd,edf->egcf", xe, p["we3"])
+    ye = jnp.einsum("egcf,efd->egcd", h, p["we2"])                   # (E,G,c,d)
+    if anchor_moe:
+        ye = shard_hints.constrain_expert_major(ye)
+
+    combine = disp * gates[..., None, None].astype(x.dtype)
+    y = jnp.einsum("gtec,egcd->gtd", combine, ye)                    # (G, g·k, d)
+    y = y.reshape(n_groups, g, k, d).sum(axis=2)
+    y = y.reshape(b, s, d)
+
+    if cfg.moe_shared:  # llama4: always-on shared expert (dense path)
+        ad = adapters or {}
+        hs = jax.nn.silu(apply_lora(x, p["w1"], ad.get("w1"), cfg.lora.alpha))
+        hs = hs * apply_lora(x, p["w3"], ad.get("w3"), cfg.lora.alpha)
+        y = y + apply_lora(hs, p["w2"], ad.get("w2"), cfg.lora.alpha)
+    return y, aux.astype(jnp.float32)
+
+
+def init_moe_params(key, cfg: ModelConfig, num_layers: int, dtype):
+    """Stacked (L, ...) MoE FFN params."""
+    d = cfg.d_model
+    e = cfg.num_experts
+    ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 7)
+    std_d, std_f = 1.0 / math.sqrt(d), 1.0 / math.sqrt(ff)
+    p = {
+        "router": (jax.random.normal(ks[0], (num_layers, d, e)) * std_d).astype(dtype),
+        "we1": (jax.random.normal(ks[1], (num_layers, e, d, ff)) * std_d).astype(dtype),
+        "we3": (jax.random.normal(ks[2], (num_layers, e, d, ff)) * std_d).astype(dtype),
+        "we2": (jax.random.normal(ks[3], (num_layers, e, ff, d)) * std_f).astype(dtype),
+    }
+    if cfg.moe_shared:
+        sf = cfg.d_ff
+        p["w1"] = (jax.random.normal(ks[4], (num_layers, d, sf)) * std_d).astype(dtype)
+        p["w3"] = (jax.random.normal(ks[5], (num_layers, d, sf)) * std_d).astype(dtype)
+        p["w2"] = (jax.random.normal(ks[6], (num_layers, sf, d)) * (1 / math.sqrt(sf))).astype(dtype)
+    return p

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (adamw, apply_updates, clip_by_global_norm,
+                                    sgd)
+from repro.optim.schedules import constant, cosine_decay, linear_warmup
+
+__all__ = ["adamw", "sgd", "apply_updates", "clip_by_global_norm",
+           "constant", "cosine_decay", "linear_warmup"]

@@ -1,0 +1,140 @@
+"""Property + unit tests for the paper's aggregation math (Eq. 1–3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregate as agg
+from repro.core import lora
+
+ALPHA = 16.0
+
+
+def _stacked(seed, k=4, d_in=24, d_out=20, r_max=8, ranks=None):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 * k)
+    ranks = ranks or [r_max] * k
+    ads = []
+    for i in range(k):
+        ad = lora.init_adapter(ks[2 * i], d_in, d_out, r_max, ranks[i])
+        ad["B"] = jax.random.normal(ks[2 * i + 1], ad["B"].shape) \
+            * ad["mask"][:, None]
+        ad["A"] = ad["A"] * ad["mask"][None, :]
+        ads.append(ad)
+    return {k2: jnp.stack([a[k2] for a in ads]) for k2 in ("A", "B", "mask")}
+
+
+# ---------------------------------------------------------------------------
+# Eq. 2: exact FedAvg of reconstructed updates
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.integers(1, 6))
+def test_factored_equals_dense_reconstruction(seed, k):
+    st_ = _stacked(seed, k=k)
+    eta = jnp.arange(1.0, k + 1)
+    dense = agg.reconstruct_global_update(st_, eta, ALPHA)
+    p, q = agg.reconstruct_factored(st_, eta, ALPHA)
+    np.testing.assert_allclose(p @ q, dense, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_reconstruction_is_weighted_mean_of_client_updates(seed):
+    st_ = _stacked(seed, k=3, ranks=[2, 5, 8])
+    eta = jnp.array([1.0, 2.0, 3.0])
+    w = agg.reconstruct_global_update(st_, eta, ALPHA)
+    per_client = [
+        lora.delta_w({k2: v[i] for k2, v in st_.items()}, ALPHA)
+        for i in range(3)]
+    expected = sum(e * dw for e, dw in zip(eta / eta.sum(), per_client))
+    np.testing.assert_allclose(w, expected, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 1: the naive bias — zero only in degenerate cases
+# ---------------------------------------------------------------------------
+
+def test_naive_bias_zero_for_single_client():
+    st_ = _stacked(0, k=1)
+    bias = agg.aggregation_bias(st_, jnp.ones((1,)), ALPHA)
+    assert float(bias) < 1e-5
+
+
+def test_naive_bias_positive_for_divergent_clients():
+    st_ = _stacked(1, k=4)
+    bias = agg.aggregation_bias(st_, jnp.ones((4,)), ALPHA)
+    assert float(bias) > 0.05  # separate averaging is measurably biased
+
+
+def test_naive_matches_zero_padding():
+    """With heterogeneous masks, aggregate_naive == Cho et al. zero-pad."""
+    st_ = _stacked(2, k=3, ranks=[2, 4, 8])
+    eta = jnp.ones((3,)) / 3
+    out = agg.aggregate_naive(st_, eta)
+    a_pad = jnp.mean(st_["A"] * st_["mask"][:, None, :], axis=0)
+    np.testing.assert_allclose(out["A"][0], a_pad, rtol=1e-4, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 3: per-client redistribution is the OPTIMAL rank-r_k truncation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["factored", "exact", "randomized"])
+def test_hlora_redistribution_optimal(method):
+    ranks = [2, 4, 6, 8]
+    st_ = _stacked(3, k=4, ranks=ranks)
+    eta = jnp.array([1.0, 2.0, 3.0, 4.0])
+    w = np.asarray(agg.reconstruct_global_update(st_, eta, ALPHA))
+    out = agg.aggregate_hlora(st_, eta, ALPHA, method=method,
+                              key=jax.random.PRNGKey(0))
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    for i, r in enumerate(ranks):
+        got = lora.delta_w({k2: v[i] for k2, v in out.items()}, ALPHA)
+        best = (u[:, :r] * s[:r]) @ vt[:r]
+        np.testing.assert_allclose(np.asarray(got), best, rtol=1e-3,
+                                   atol=1e-4)
+
+
+def test_hlora_sqrt_split_same_delta():
+    st_ = _stacked(4, k=3, ranks=[3, 5, 8])
+    eta = jnp.ones((3,))
+    out_p = agg.aggregate_hlora(st_, eta, ALPHA, split="paper")
+    out_s = agg.aggregate_hlora(st_, eta, ALPHA, split="sqrt")
+    for i in range(3):
+        dp = lora.delta_w({k: v[i] for k, v in out_p.items()}, ALPHA)
+        ds = lora.delta_w({k: v[i] for k, v in out_s.items()}, ALPHA)
+        np.testing.assert_allclose(dp, ds, rtol=1e-3, atol=1e-4)
+
+
+def test_stacked_layer_axis_vmapped():
+    """Aggregation must vmap over an extra (layer) stack axis."""
+    key = jax.random.PRNGKey(9)
+    k, L, d_in, d_out, r = 3, 4, 16, 12, 6
+    a = jax.random.normal(key, (k, L, d_in, r))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (k, L, r, d_out))
+    mask = jnp.ones((k, L, r))
+    st_ = {"A": a, "B": b, "mask": mask}
+    eta = jnp.ones((k,))
+    out = agg.aggregate_hlora(st_, eta, ALPHA)
+    assert out["A"].shape == (k, L, d_in, r)
+    w = np.asarray(agg.reconstruct_global_update(st_, eta, ALPHA))
+    got = np.asarray(
+        lora.delta_w({k2: v[0] for k2, v in out.items()}, ALPHA))
+    # per-layer: client 0's update == best rank-r truncation of that
+    # layer's aggregate (the aggregate has rank up to k·r > r)
+    for layer in range(L):
+        u, s, vt = np.linalg.svd(w[layer], full_matrices=False)
+        best = (u[:, :r] * s[:r]) @ vt[:r]
+        np.testing.assert_allclose(got[layer], best, rtol=1e-3, atol=1e-4)
+
+
+def test_aggregate_tree_dispatch():
+    st_ = _stacked(5, k=2)
+    tree = {"q": st_, "v": _stacked(6, k=2)}
+    eta = jnp.ones((2,))
+    for strategy in ("naive", "hlora"):
+        out = agg.aggregate_tree(tree, eta, ALPHA, strategy=strategy)
+        assert set(out) == {"q", "v"}
+        assert out["q"]["A"].shape == st_["A"].shape

@@ -1,0 +1,84 @@
+"""Unit tests for the LoRA adapter layer (static-shape heterogeneous rank)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lora
+
+ALPHA = 16.0
+
+
+def _adapter(key, d_in=32, d_out=24, r_max=8, rank=None, train_b=True):
+    ad = lora.init_adapter(key, d_in, d_out, r_max, rank)
+    if train_b:
+        ad["B"] = jax.random.normal(jax.random.fold_in(key, 7), ad["B"].shape)
+    return ad
+
+
+def test_init_shapes_and_zero_delta(rng_key):
+    ad = lora.init_adapter(rng_key, 32, 24, 8)
+    assert ad["A"].shape == (32, 8)
+    assert ad["B"].shape == (8, 24)
+    assert ad["mask"].shape == (8,)
+    np.testing.assert_allclose(lora.delta_w(ad, ALPHA), 0.0)  # B = 0 at init
+
+
+def test_rank_mask_semantics(rng_key):
+    """Masked rank directions contribute exactly zero and block gradients."""
+    ad = _adapter(rng_key, rank=3)
+    dw = lora.delta_w(ad, ALPHA)
+    # manual: only first 3 columns/rows participate, scale alpha/3
+    manual = (ALPHA / 3.0) * ad["A"][:, :3] @ ad["B"][:3, :]
+    np.testing.assert_allclose(dw, manual, rtol=1e-5)
+    # changing masked entries must not change delta_w
+    ad2 = dict(ad)
+    ad2["A"] = ad["A"].at[:, 3:].set(99.0)
+    ad2["B"] = ad["B"].at[3:, :].set(-99.0)
+    np.testing.assert_allclose(lora.delta_w(ad2, ALPHA), dw, rtol=1e-6)
+
+
+def test_masked_gradients_zero(rng_key):
+    ad = _adapter(rng_key, rank=4)
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (4, 32))
+    w0 = jax.random.normal(jax.random.fold_in(rng_key, 2), (32, 24))
+
+    def loss(a, b):
+        y = lora.apply_lora(x, w0, {"A": a, "B": b, "mask": ad["mask"]}, ALPHA)
+        return jnp.sum(y ** 2)
+
+    ga, gb = jax.grad(loss, argnums=(0, 1))(ad["A"], ad["B"])
+    np.testing.assert_allclose(ga[:, 4:], 0.0)
+    np.testing.assert_allclose(gb[4:, :], 0.0)
+    assert float(jnp.abs(ga[:, :4]).max()) > 0
+
+
+def test_apply_matches_merge(rng_key):
+    ad = _adapter(rng_key, rank=5)
+    x = jax.random.normal(jax.random.fold_in(rng_key, 3), (6, 32))
+    w0 = jax.random.normal(jax.random.fold_in(rng_key, 4), (32, 24))
+    y1 = lora.apply_lora(x, w0, ad, ALPHA)
+    y2 = x @ lora.merge(w0, ad, ALPHA)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+
+
+def test_effective_rank_and_scale(rng_key):
+    ad = lora.init_adapter(rng_key, 16, 16, 8, rank=2)
+    assert float(lora.effective_rank(ad)) == 2.0
+    assert float(lora.lora_scale(ad, ALPHA)) == ALPHA / 2.0
+
+
+def test_comm_bytes_proportional_to_rank(rng_key):
+    ad = lora.init_adapter(rng_key, 64, 64, 8)
+    b8 = lora.comm_bytes(ad, 8)
+    b2 = lora.comm_bytes(ad, 2)
+    assert b2 * 4 == b8  # bytes ∝ r_k (claim C4)
+
+
+def test_stacked_init(rng_key):
+    ad = lora.init_adapter(rng_key, 16, 8, 4, rank=3, stack_dims=(5,))
+    assert ad["A"].shape == (5, 16, 4)
+    assert ad["B"].shape == (5, 4, 8)
+    assert ad["mask"].shape == (5, 4)
+    dw = lora.delta_w(ad, ALPHA)
+    assert dw.shape == (5, 16, 8)

@@ -1,0 +1,141 @@
+"""Optimizer, schedules, data pipeline, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import checkpoint
+from repro.data import (dirichlet_partition, iid_partition, make_bigram_lm,
+                        make_pair_classification)
+from repro.optim import (adamw, apply_updates, clip_by_global_norm, constant,
+                         cosine_decay, linear_warmup, sgd)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("make_opt", [lambda: adamw(0.1),
+                                      lambda: sgd(0.05, momentum=0.9)])
+def test_optimizer_minimizes_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.array([3.0, -2.0]), "b": jnp.array(1.5)}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + p["b"] ** 2
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    assert float(loss(params)) < 1e-3
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(0.1, weight_decay=0.1)
+    params = {"w": jnp.ones((4,))}
+    state = opt.init(params)
+    g = {"w": jnp.zeros((4,))}
+    upd, state = opt.update(g, state, params)
+    params = apply_updates(params, upd)
+    assert float(params["w"][0]) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(20.0)
+    norm2 = float(jnp.linalg.norm(clipped["a"]))
+    assert norm2 == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    assert float(constant(0.1)(jnp.int32(5))) == pytest.approx(0.1)
+    w = linear_warmup(1.0, 10)
+    assert float(w(jnp.int32(5))) == pytest.approx(0.5)
+    c = cosine_decay(1.0, 100, warmup_steps=10, final_frac=0.1)
+    assert float(c(jnp.int32(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(c(jnp.int32(100))) == pytest.approx(0.1, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Data
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(alpha=st.floats(0.1, 10.0), clients=st.integers(2, 20))
+def test_dirichlet_partition_covers_everything(alpha, clients):
+    _, labels = make_pair_classification("mrpc", 400, seed=0)
+    shards = dirichlet_partition(labels, clients, alpha, seed=1)
+    all_idx = np.concatenate(shards)
+    assert len(all_idx) == 400
+    assert len(np.unique(all_idx)) == 400  # disjoint + complete
+    assert min(len(s) for s in shards) >= 2
+
+
+def test_dirichlet_skew_increases_with_small_alpha():
+    _, labels = make_pair_classification("mrpc", 2000, seed=0)
+
+    def skew(alpha):
+        shards = dirichlet_partition(labels, 10, alpha, seed=2)
+        fracs = [labels[s].mean() for s in shards]
+        return np.std(fracs)
+
+    assert skew(0.1) > skew(100.0)
+
+
+def test_tasks_are_learnable_signal():
+    """Positives share more raw-token overlap than negatives (the planted
+    signal the models learn)."""
+    for task in ("qqp", "mrpc", "rte"):
+        toks, labels = make_pair_classification(task, 2000, seed=3)
+        seg = (toks.shape[1] - 3) // 2
+        s1 = toks[:, 1:1 + seg]
+        s2 = toks[:, 2 + seg:2 + 2 * seg]
+        overlap = np.array([
+            len(np.intersect1d(a, b)) for a, b in zip(s1, s2)])
+        pos = overlap[labels == 1].mean()
+        neg = overlap[labels == 0].mean()
+        assert pos > neg + 1.0, (task, pos, neg)
+
+
+def test_bigram_lm_has_structure():
+    data = make_bigram_lm(100, 64, 32, seed=0)
+    assert data["tokens"].shape == (100, 64)
+    np.testing.assert_array_equal(data["tokens"][:, 1:], data["labels"][:, :-1])
+    # a fixed chain => conditional entropy < uniform
+    from collections import Counter
+    pairs = Counter(zip(data["tokens"][:, :-1].ravel(),
+                        data["tokens"][:, 1:].ravel()))
+    top = pairs.most_common(32)
+    assert top[0][1] > 3 * (100 * 63) / (32 * 32)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "layers": {"w": jnp.arange(6.0).reshape(2, 3),
+                   "b16": jnp.ones((4,), jnp.bfloat16) * 1.5},
+        "step": jnp.int32(7),
+    }
+    d = checkpoint.save(str(tmp_path), 7, tree, meta={"note": "x"})
+    assert os.path.isdir(d)
+    restored, meta = checkpoint.restore(str(tmp_path))
+    assert meta["step"] == 7 and meta["note"] == "x"
+    np.testing.assert_array_equal(restored["layers"]["w"],
+                                  np.asarray(tree["layers"]["w"]))
+    assert restored["layers"]["b16"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["layers"]["b16"], np.float32),
+        np.asarray(tree["layers"]["b16"], np.float32))
+
+
+def test_checkpoint_latest_step(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    checkpoint.save(str(tmp_path), 1, tree)
+    checkpoint.save(str(tmp_path), 5, tree)
+    assert checkpoint.latest_step(str(tmp_path)) == 5
