@@ -1,20 +1,27 @@
 """Server-side aggregation cost: the paper's 'no extra cost' claim (C4)
-plus our beyond-paper factored-SVD speedup.
+plus our beyond-paper factored-SVD speedup and the batched engine.
 
 Measures, per aggregation round at RoBERTa-large scale (d=1024, K=20,
-r_max=8, 24 layers):
+r_max=8, 24 layers, q+v targets):
   - naive separate averaging (Eq. 1 baseline),
   - HLoRA dense reconstruct + exact SVD (the paper as written),
   - HLoRA dense reconstruct + randomized SVD (TPU-friendly),
-  - HLoRA factored reconstruct + factored SVD (ours — never forms ΔW).
+  - HLoRA factored reconstruct + factored SVD (ours — never forms ΔW),
+and then the headline comparison for the whole tree:
+  - seed per-target Python loop (aggregate_tree_reference, un-jitted),
+  - batched engine (one jit-compiled, structure-cached call),
+emitting the speedup and the relative Frobenius gap between the two.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.core import agg_engine
 from repro.core import aggregate as agg
+from repro.core import lora as lora_lib
 
 
 def _stacked(key, k=20, layers=24, d_in=1024, d_out=1024, r=8):
@@ -24,6 +31,26 @@ def _stacked(key, k=20, layers=24, d_in=1024, d_out=1024, r=8):
         "B": jax.random.normal(ks[1], (k, layers, r, d_out)),
         "mask": jnp.ones((k, layers, r)),
     }
+
+
+def _tree(key, targets=("q", "v"), **kw):
+    """Full RoBERTa-large-scale adapter tree: all LoRA targets × layers."""
+    return {t: _stacked(jax.random.fold_in(key, i), **kw)
+            for i, t in enumerate(targets)}
+
+
+def _tree_rel_error(got, ref, alpha) -> float:
+    """Max over targets/clients of ‖ΔW_got − ΔW_ref‖_F / ‖ΔW_ref‖_F."""
+    worst = 0.0
+    for t in ref:
+        dw_g = lora_lib.delta_w(
+            {k: v[:1] for k, v in got[t].items()}, alpha)
+        dw_r = lora_lib.delta_w(
+            {k: v[:1] for k, v in ref[t].items()}, alpha)
+        num = float(jnp.linalg.norm(dw_g - dw_r))
+        den = max(float(jnp.linalg.norm(dw_r)), 1e-30)
+        worst = max(worst, num / den)
+    return worst
 
 
 def run(quick=False):
@@ -46,6 +73,28 @@ def run(quick=False):
         emit(f"server/hlora_{method}", us,
              f"layers={layers} speedup_vs_exact="
              f"{results.get('exact', us) / us:.2f}x")
+
+    # -- whole-tree: seed per-target loop vs batched engine -----------------
+    tree = _tree(key, layers=layers)
+    n_mats = len(tree) * layers
+    seed_fn = lambda: agg.aggregate_tree_reference(tree, eta, alpha)
+    us_seed = time_fn(seed_fn)
+    results["tree_seed_loop"] = us_seed
+    emit("server/tree_seed_loop", us_seed,
+         f"targets={len(tree)} layers={layers} K={st['A'].shape[0]} "
+         f"(un-jitted per-target loop)")
+
+    engine = agg_engine.AggregationEngine()
+    eng_fn = lambda: engine(tree, eta, alpha)[0]
+    us_eng = time_fn(eng_fn)
+    results["tree_engine"] = us_eng
+    rel = _tree_rel_error(engine(tree, eta, alpha)[0], seed_fn(), alpha)
+    results["tree_rel_error"] = rel
+    results["tree_speedup"] = us_seed / us_eng
+    emit("server/tree_engine", us_eng,
+         f"one compiled call for {n_mats} matrices; "
+         f"speedup_vs_seed_loop={us_seed / us_eng:.2f}x "
+         f"rel_frob_err={rel:.2e} traces={engine.trace_count}")
     return results
 
 

@@ -1,5 +1,8 @@
 """HLoRA core: LoRA adapters with heterogeneous ranks, server aggregation
-(naive / zero-pad / HLoRA reconstruct+SVD), rank policies."""
-from repro.core import aggregate, lora, rank, svd
+(naive / zero-pad / HLoRA reconstruct+SVD), the batched jit-cached
+aggregation engine, rank policies."""
+from repro.core import agg_engine, aggregate, lora, rank, svd
+from repro.core.agg_engine import AggregationEngine, default_engine
 
-__all__ = ["aggregate", "lora", "rank", "svd"]
+__all__ = ["agg_engine", "aggregate", "lora", "rank", "svd",
+           "AggregationEngine", "default_engine"]

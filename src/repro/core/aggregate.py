@@ -26,14 +26,13 @@ any extra stack axes automatically.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import svd as svd_lib
-from repro.core.lora import Adapter, lora_scale, make_rank_mask, masked_factors
+from repro.core.lora import lora_scale, masked_factors
 
 StackedAdapter = Dict[str, jax.Array]  # leaves have leading (K, ...) axes
 
@@ -101,24 +100,6 @@ def reconstruct_factored(
     return p, q
 
 
-def _decompose_one(
-    delta_w: Optional[jax.Array],
-    pq: Optional[Tuple[jax.Array, jax.Array]],
-    r_max: int,
-    method: str,
-    key: Optional[jax.Array],
-):
-    """Top-r_max SVD of the aggregate, by the chosen backend."""
-    if method == "factored":
-        p, q = pq
-        return svd_lib.svd_factored(p, q, r_max)
-    if method == "exact":
-        return svd_lib.svd_exact(delta_w, r_max)
-    if method == "randomized":
-        return svd_lib.svd_randomized(delta_w, r_max, key)
-    raise ValueError(f"unknown svd method {method!r}")
-
-
 def aggregate_hlora(
     stacked: StackedAdapter,
     eta: jax.Array,
@@ -143,17 +124,13 @@ def aggregate_hlora(
     # Leading stack axes between K and the matrix dims (e.g. layers):
     stack_ndim = stacked["A"].ndim - 3
 
-    def svd_fn(p, q, w):
-        return _decompose_one(w, (p, q), r_max, method, key)
-
     if method == "factored":
         p, q = reconstruct_factored(stacked, eta, alpha)
-        w = jnp.zeros(())  # unused placeholder
         fn = lambda p_, q_: svd_lib.svd_factored(p_, q_, r_max)
         for _ in range(stack_ndim):
             fn = jax.vmap(fn)
         u, s, vt = fn(p, q)
-    else:
+    elif method in ("exact", "randomized"):
         w = reconstruct_global_update(stacked, eta, alpha)
         if method == "exact":
             fn = lambda w_: svd_lib.svd_exact(w_, r_max)
@@ -162,6 +139,8 @@ def aggregate_hlora(
         for _ in range(stack_ndim):
             fn = jax.vmap(fn)
         u, s, vt = fn(w)
+    else:
+        raise ValueError(f"unknown svd method {method!r}")
 
     a_new, b_new = svd_lib.split_factors(u, s, vt, r_max, split)
 
@@ -182,8 +161,35 @@ def aggregate_tree(
     method: str = "factored",
     split: str = "paper",
     key: Optional[jax.Array] = None,
+    engine=None,
 ) -> Dict[str, StackedAdapter]:
-    """Apply the chosen aggregation to every LoRA target in the tree."""
+    """Apply the chosen aggregation to every LoRA target in the tree.
+
+    Dispatches to the batched :class:`~repro.core.agg_engine.AggregationEngine`
+    (one jit-compiled, structure-cached call for the whole tree) — see
+    agg_engine.py. ``aggregate_tree_reference`` keeps the per-target loop
+    as the equivalence oracle for tests and benchmarks.
+    """
+    from repro.core import agg_engine
+    eng = engine if engine is not None else agg_engine.default_engine()
+    out, _spectra = eng(adapters, eta, alpha, strategy=strategy,
+                        new_masks=new_masks, method=method, split=split,
+                        key=key)
+    return out
+
+
+def aggregate_tree_reference(
+    adapters: Dict[str, StackedAdapter],
+    eta: jax.Array,
+    alpha: float,
+    strategy: str = "hlora",
+    new_masks: Optional[Dict[str, jax.Array]] = None,
+    method: str = "factored",
+    split: str = "paper",
+    key: Optional[jax.Array] = None,
+) -> Dict[str, StackedAdapter]:
+    """Seed per-target Python loop — un-batched, un-jitted. Kept as the
+    oracle the engine is pinned against (tests + bench_server)."""
     out = {}
     for name in sorted(adapters):
         nm = None if new_masks is None else new_masks[name]

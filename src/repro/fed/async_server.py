@@ -29,9 +29,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import aggregate as agg_lib
-from repro.core import svd as svd_lib
-from repro.core.lora import delta_w, make_rank_mask
+from repro.core import agg_engine
+from repro.core.lora import make_rank_mask
 from repro.fed.server import ServerConfig, assign_ranks
 from repro.models import transformer as tf_lib
 
@@ -49,11 +48,18 @@ class AsyncFedServer:
     def __init__(self, cfg: ModelConfig, scfg: ServerConfig,
                  acfg: AsyncConfig, base_params,
                  client_speeds: Sequence[float],
-                 client_sizes: Optional[Sequence[int]] = None):
+                 client_sizes: Optional[Sequence[int]] = None,
+                 engine: Optional[agg_engine.AggregationEngine] = None):
         from repro.fed.client import split_head
         self.cfg = cfg
         self.scfg = scfg
         self.acfg = acfg
+        # Whole-tree batched aggregation, jit-cached on tree structure:
+        # every submit after the first replays one compiled executable
+        # (the seed path re-dispatched an un-jitted per-target loop per
+        # event — the async server's hot path).
+        self.engine = engine if engine is not None \
+            else agg_engine.default_engine()
         frozen, head = split_head(base_params)
         self.base = frozen
         self.global_head = head
@@ -91,22 +97,21 @@ class AsyncFedServer:
             return False
         w = self.acfg.base_weight * (1.0 + tau) ** (-self.acfg.staleness_exp)
         alpha = self.cfg.lora.alpha
-        r_max = self.cfg.lora.r_max
-        for t, ad in trained_lora.items():
-            g = self.global_lora[t]
-            # running average in factored form: stack [global, client] and
-            # re-decompose — one exact factored SVD per target
-            stacked = {
-                "A": jnp.stack([g["A"], ad["A"]]),
-                "B": jnp.stack([g["B"], ad["B"]]),
-                "mask": jnp.stack([g["mask"], ad["mask"]]),
-            }
-            eta = jnp.array([1.0 - w, w], jnp.float32)
-            out = agg_lib.aggregate_hlora(
-                stacked, eta, alpha,
-                new_masks=jnp.ones_like(stacked["mask"][:1]),
-                method="factored")
-            self.global_lora[t] = {k: v[0] for k, v in out.items()}
+        # Running average in factored form: stack [global, client] per
+        # target and re-decompose the whole tree in ONE batched engine
+        # call (exact factored SVD; all targets × layers in one batch).
+        tree = {
+            t: {"A": jnp.stack([g["A"], trained_lora[t]["A"]]),
+                "B": jnp.stack([g["B"], trained_lora[t]["B"]]),
+                "mask": jnp.stack([g["mask"], trained_lora[t]["mask"]])}
+            for t, g in self.global_lora.items()}
+        new_masks = {t: jnp.ones_like(st["mask"][:1])
+                     for t, st in tree.items()}
+        eta = jnp.array([1.0 - w, w], jnp.float32)
+        out, _spectra = self.engine(tree, eta, alpha, strategy="hlora",
+                                    new_masks=new_masks, method="factored")
+        self.global_lora = {t: {k: v[0] for k, v in ad.items()}
+                            for t, ad in out.items()}
         self.version += 1
         return True
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import aggregate as agg_lib
+from repro.core import agg_engine
 from repro.core import rank as rank_lib
 from repro.models import transformer as tf_lib
 
@@ -71,7 +71,8 @@ def assign_ranks(scfg: ServerConfig, client_sizes, capacities=None,
 class FedServer:
     def __init__(self, cfg: ModelConfig, server_cfg: ServerConfig,
                  base_params, client_sizes: Sequence[int],
-                 capacities: Optional[Sequence[float]] = None):
+                 capacities: Optional[Sequence[float]] = None,
+                 engine: Optional[agg_engine.AggregationEngine] = None):
         from repro.fed.client import split_head
         self.cfg = cfg
         self.scfg = server_cfg
@@ -85,6 +86,14 @@ class FedServer:
         # Global adapter at full rank (A gaussian, B zero => ΔW = 0).
         self.global_lora = tf_lib.init_lora(jax.random.PRNGKey(server_cfg.seed),
                                             cfg)
+        # Batched aggregation engine: one compiled call per round, cached
+        # on tree structure. Shared process-wide by default so every
+        # server (and the benchmarks) reuse one jit cache.
+        self.engine = engine if engine is not None \
+            else agg_engine.default_engine()
+        # Singular spectrum of the last aggregated ΔW' per target,
+        # {target: (*stack, r_max)} — surfaced by the engine for free.
+        self.last_spectrum: Optional[dict] = None
         self.rounds_done = 0
 
     # -- cohort handling ----------------------------------------------------
@@ -144,7 +153,7 @@ class FedServer:
                 stacked_heads)
         full = {t: jnp.ones_like(ad["mask"][:1])
                 for t, ad in stacked_trained.items()}
-        out = agg_lib.aggregate_tree(
+        out, spectra = self.engine(
             stacked_trained, eta, self.cfg.lora.alpha,
             strategy=self.scfg.strategy, method=self.scfg.svd_method,
             split=self.scfg.split, new_masks=full,
@@ -152,25 +161,38 @@ class FedServer:
         self.global_lora = {
             t: {"A": ad["A"][0], "B": ad["B"][0], "mask": ad["mask"][0]}
             for t, ad in out.items()}
+        self.last_spectrum = spectra if self.scfg.strategy == "hlora" \
+            else None
         if self.scfg.rank_policy == "spectrum":
             self.adapt_ranks()
         self.rounds_done += 1
 
     def adapt_ranks(self) -> None:
         """Beyond-paper adaptive policy: read the singular spectrum of the
-        aggregated ΔW' (already factored as A'·B' with Σ folded into B' —
-        column/row norms give the singular values directly for the 'paper'
-        split) and pick the smallest rank capturing ``spectrum_energy``."""
-        from repro.core.lora import delta_w
-        import numpy as np
-        energies = []
-        for t, ad in self.global_lora.items():
-            # 'paper' split: A' = U (orthonormal cols), B' = Σ Vᵀ / s'
-            # -> row norms of B' ∝ singular values (per layer; average)
-            b = np.asarray(jnp.linalg.norm(ad["B"], axis=-1))  # (L, r) | (r,)
-            s = b.mean(axis=0) if b.ndim == 2 else b
-            energies.append(s ** 2)
-        s2 = np.mean(np.stack(energies), axis=0)
+        aggregated ΔW' and pick the smallest rank capturing
+        ``spectrum_energy`` of it.
+
+        The spectrum comes straight from the engine (it just ran the SVD,
+        so Σ is free). When no engine spectrum is available — e.g. a
+        restored server that has not aggregated yet — fall back to
+        deriving it from the stored factors, normalizing per split: under
+        'paper' B' rows have norm σ, under 'sqrt' both factors carry √σ
+        (so row norms of B' are √σ and must be squared)."""
+        if self.last_spectrum is not None:
+            sv = [np.asarray(s, np.float64).reshape(-1, s.shape[-1]).mean(0)
+                  for s in self.last_spectrum.values()]
+        else:
+            sv = []
+            for t, ad in self.global_lora.items():
+                b = np.asarray(jnp.linalg.norm(ad["B"], axis=-1))  # (L,r)|(r,)
+                s = b.reshape(-1, b.shape[-1]).mean(axis=0)
+                if self.scfg.split == "sqrt":
+                    s = s ** 2          # row norms of B' are √σ under 'sqrt'
+                sv.append(s)
+        # mean over targets of per-target energy (σ²) — squaring before
+        # pooling, as the seed did; pooling then squaring weights targets
+        # with dissimilar spectra differently and shifts the cutoff.
+        s2 = np.mean(np.stack(sv) ** 2, axis=0)
         cum = np.cumsum(s2) / max(float(s2.sum()), 1e-30)
         r_star = int(np.searchsorted(cum, self.scfg.spectrum_energy) + 1)
         r_star = int(np.clip(r_star, self.scfg.r_min, self.scfg.r_max))

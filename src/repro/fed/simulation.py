@@ -99,6 +99,7 @@ def run_experiment(
     scfg: ServerConfig,
     base_params=None,
     eval_every: int = 1,
+    engine=None,
 ) -> Dict[str, List[float]]:
     if base_params is None:
         base_params = pretrain_backbone(cfg, sim)
@@ -114,8 +115,12 @@ def run_experiment(
 
     shards = dirichlet_partition(labels, scfg.num_clients,
                                  sim.dirichlet_alpha, seed=sim.seed)
+    # The server aggregates with the batched engine (shared process-wide
+    # jit cache unless the caller passes a dedicated one): round 1 traces,
+    # every later round replays the compiled whole-tree aggregation.
     server = FedServer(cfg, scfg, base_params,
-                       client_sizes=[len(s) for s in shards])
+                       client_sizes=[len(s) for s in shards],
+                       engine=engine)
 
     opt = adamw(sim.lr)
     cohort_train = make_cohort_train(cfg, opt)

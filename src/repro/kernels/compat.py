@@ -1,0 +1,14 @@
+"""Version shims for the Pallas TPU API.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` upstream;
+the baked-in toolchain may carry either name depending on the jaxlib
+vintage. Resolve once at import so every kernel stays source-compatible.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

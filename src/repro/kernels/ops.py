@@ -34,20 +34,67 @@ def _pad_rank(a: jax.Array, b: jax.Array, lanes: int = 128):
     return a, b
 
 
+def _ceil_to(x: int, block: int) -> int:
+    return -(-x // block) * block
+
+
+def _eff_block(dim: int, block: int, tile: int = 128) -> int:
+    """Block size actually handed to the kernel: the requested block when
+    the dim tiles it exactly, otherwise fall back to the hardware tile so
+    the padded dim stays MXU/VPU-aligned (a block of min(block, dim)
+    would forward an unaligned dim straight to Mosaic on TPU)."""
+    return block if dim % block == 0 else tile
+
+
+def _pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
+    if x.shape[axis] == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pads)
+
+
 def lora_matmul(x, w0, a, b, scale: float = 1.0, *,
-                interpret: Optional[bool] = None, **blocks):
-    """Fused y = x @ W0 + scale (x A) B; kernel when shapes tile, ref
-    otherwise."""
+                interpret: Optional[bool] = None,
+                block_m: int = 256, block_n: int = 256, block_k: int = 512):
+    """Fused y = x @ W0 + scale (x A) B.
+
+    Non-MXU-aligned shapes are zero-padded up to the effective block
+    multiple here (zero rows/cols contribute zero to every product) and
+    the result sliced back — the raw kernel keeps its hard divisibility
+    asserts."""
     interpret = (not on_tpu()) if interpret is None else interpret
     a, b = _pad_rank(a, b)
-    return _lora_matmul(x, w0, a, b, scale, interpret=interpret, **blocks)
+    m, k = x.shape
+    n = w0.shape[1]
+    bm = _eff_block(m, block_m)
+    bn = _eff_block(n, block_n)
+    bk = _eff_block(k, block_k)
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    if (mp, kp, np_) != (m, k, n):
+        x = _pad_axis(_pad_axis(x, 0, mp), 1, kp)
+        w0 = _pad_axis(_pad_axis(w0, 0, kp), 1, np_)
+        a = _pad_axis(a, 0, kp)
+        b = _pad_axis(b, 1, np_)
+    y = _lora_matmul(x, w0, a, b, scale, block_m=bm, block_n=bn,
+                     block_k=bk, interpret=interpret)
+    return y[:m, :n] if (mp, np_) != (m, n) else y
 
 
-def recon_agg(a, b, eta, *, interpret: Optional[bool] = None, **blocks):
-    """W' = Σ_k η_k A_k B_k (server aggregation, Eq. 2)."""
+def recon_agg(a, b, eta, *, interpret: Optional[bool] = None,
+              block_m: int = 256, block_n: int = 256):
+    """W' = Σ_k η_k A_k B_k (server aggregation, Eq. 2). Shape-pads
+    d_in/d_out to block multiples and slices the result back."""
     interpret = (not on_tpu()) if interpret is None else interpret
     a, b = _pad_rank(a, b)
-    return _recon_agg(a, b, eta, interpret=interpret, **blocks)
+    d_in, d_out = a.shape[1], b.shape[2]
+    bm, bn = _eff_block(d_in, block_m), _eff_block(d_out, block_n)
+    ip, op = _ceil_to(d_in, bm), _ceil_to(d_out, bn)
+    if (ip, op) != (d_in, d_out):
+        a = _pad_axis(a, 1, ip)
+        b = _pad_axis(b, 2, op)
+    w = _recon_agg(a, b, eta, block_m=bm, block_n=bn, interpret=interpret)
+    return w[:d_in, :d_out] if (ip, op) != (d_in, d_out) else w
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

@@ -1,0 +1,102 @@
+"""Minimal deterministic stand-in for the ``hypothesis`` package.
+
+The seed suite property-tests with hypothesis, but the runtime image does
+not ship it (it is a dev-only dependency — see requirements-dev.txt).
+Rather than skip those modules wholesale, this stub implements the tiny
+slice of the API the tests use (``given``, ``settings``,
+``strategies.integers/floats/booleans/sampled_from``) with *deterministic*
+sampling: each ``@given`` test runs ``max_examples`` times on values drawn
+from a fixed-seed RNG, so the property still gets exercised across a
+spread of inputs and failures are reproducible.
+
+Installed by ``tests/conftest.py`` into ``sys.modules`` only when the real
+hypothesis cannot be imported; with hypothesis installed, the genuine
+package (shrinking, fuzzing, the works) is used instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=1 << 16) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw) -> _Strategy:
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+class settings:
+    """Decorator recording ``max_examples``; other kwargs are accepted and
+    ignored (``deadline`` et al. have no meaning for the stub)."""
+
+    def __init__(self, max_examples: int = 10, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise NotImplementedError(
+            "the stub supports keyword strategies only (given(x=st...))")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 10))
+            rng = random.Random(0xA5)
+            for _ in range(n):
+                drawn = {k: s.example_from(rng)
+                         for k, s in kw_strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # Hide the strategy-filled parameters from pytest, which would
+        # otherwise try to resolve them as fixtures.
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items()
+                  if name not in kw_strategies]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``hypothesis.strategies``)."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.floats = floats
+    strategies.booleans = booleans
+    strategies.sampled_from = sampled_from
+    mod.strategies = strategies
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strategies

@@ -5,6 +5,16 @@ import pytest
 # dry-run, forces 512 placeholder devices — see launch/dryrun.py).
 jax.config.update("jax_enable_x64", False)
 
+# Property tests use hypothesis when available; the runtime image does not
+# ship it, so fall back to a deterministic stub (same API surface, fixed
+# RNG) rather than failing collection. See tests/_hypothesis_stub.py and
+# requirements-dev.txt.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+    _hypothesis_stub.install()
+
 
 @pytest.fixture(scope="session")
 def rng_key():

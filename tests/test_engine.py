@@ -1,0 +1,392 @@
+"""Batched aggregation engine vs the seed per-target loop (the oracle).
+
+The engine (core/agg_engine.py) must be an *evaluation strategy*, not a
+semantic change: for every strategy × SVD method × split, its whole-tree
+batched output matches ``aggregate_tree_reference`` to tolerance, while
+compiling exactly once per tree structure.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import agg_engine, lora
+from repro.core import aggregate as agg
+
+ALPHA = 16.0
+
+
+def _stacked(seed, k=4, d_in=24, d_out=20, r_max=8, ranks=None, layers=None):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 2 * k)
+    ranks = ranks or [r_max] * k
+    ads = []
+    for i in range(k):
+        stack = (layers,) if layers else ()
+        ad = lora.init_adapter(ks[2 * i], d_in, d_out, r_max, ranks[i],
+                               stack)
+        ad["B"] = jax.random.normal(ks[2 * i + 1], ad["B"].shape) \
+            * ad["mask"][..., :, None]
+        ad["A"] = ad["A"] * ad["mask"][..., None, :]
+        ads.append(ad)
+    return {k2: jnp.stack([a[k2] for a in ads]) for k2 in ("A", "B", "mask")}
+
+
+def _tree(layers=None):
+    """Three targets, two distinct leaf shapes — exercises shape grouping."""
+    return {
+        "q": _stacked(1, ranks=[2, 4, 6, 8], layers=layers),
+        "v": _stacked(2, ranks=[8, 3, 5, 2], layers=layers),
+        "w2": _stacked(3, d_in=40, d_out=24, layers=layers),
+    }
+
+
+def _assert_trees_close(got, ref, rtol=2e-4, atol=1e-5):
+    assert set(got) == set(ref)
+    for t in ref:
+        for leaf in ("A", "B", "mask"):
+            np.testing.assert_allclose(
+                np.asarray(got[t][leaf]), np.asarray(ref[t][leaf]),
+                rtol=rtol, atol=atol, err_msg=f"{t}/{leaf}")
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: batched engine == seed loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layers", [None, 3])
+@pytest.mark.parametrize("strategy", ["naive", "hlora"])
+@pytest.mark.parametrize("split", ["paper", "sqrt"])
+def test_engine_matches_reference(layers, strategy, split):
+    # factored_impl='qr' runs the same LAPACK QR as the seed loop, so the
+    # batching itself must be bit-comparable; the 'gram' fast path is
+    # pinned separately in the Frobenius metric below.
+    tree = _tree(layers)
+    eta = jnp.array([1.0, 2.0, 3.0, 4.0])
+    eng = agg_engine.AggregationEngine(use_pallas=False, factored_impl="qr")
+    ref = agg.aggregate_tree_reference(tree, eta, ALPHA, strategy=strategy,
+                                       split=split)
+    got, spectra = eng(tree, eta, ALPHA, strategy=strategy, split=split)
+    _assert_trees_close(got, ref)
+    stack = () if layers is None else (layers,)
+    for t in tree:
+        assert spectra[t].shape == (*stack, 8)
+
+
+@pytest.mark.parametrize("method", ["factored", "exact", "randomized"])
+def test_engine_svd_methods_match_reference(method):
+    # K=2, r_max=8: aggregate rank ≤ 16 = r + oversample, so even the
+    # randomized backend is exact (key-independent) and comparable.
+    tree = {"q": _stacked(4, k=2, ranks=[3, 8]),
+            "v": _stacked(5, k=2, ranks=[8, 8])}
+    eta = jnp.array([1.0, 3.0])
+    eng = agg_engine.AggregationEngine(use_pallas=False)
+    key = jax.random.PRNGKey(7)
+    ref = agg.aggregate_tree_reference(tree, eta, ALPHA, method=method,
+                                       key=key)
+    got, _ = eng(tree, eta, ALPHA, method=method, key=key)
+    for t in tree:
+        for i in range(2):
+            dw_ref = lora.delta_w({k: v[i] for k, v in ref[t].items()}, ALPHA)
+            dw_got = lora.delta_w({k: v[i] for k, v in got[t].items()}, ALPHA)
+            np.testing.assert_allclose(np.asarray(dw_got), np.asarray(dw_ref),
+                                       rtol=1e-3, atol=1e-4)
+
+
+def test_engine_new_masks_redistribution():
+    """Server redistribution masks (possibly with a different client axis,
+    e.g. the K=1 full-rank global) flow through the batched path."""
+    tree = _tree(layers=2)
+    eta = jnp.ones((4,))
+    new_masks = {t: jnp.ones_like(ad["mask"][:1]) for t, ad in tree.items()}
+    eng = agg_engine.AggregationEngine(use_pallas=False, factored_impl="qr")
+    ref = agg.aggregate_tree_reference(tree, eta, ALPHA, new_masks=new_masks)
+    got, _ = eng(tree, eta, ALPHA, new_masks=new_masks)
+    _assert_trees_close(got, ref)
+    assert got["q"]["A"].shape[0] == 1   # K' = 1 output client axis
+
+
+def test_engine_gram_fast_path_frobenius():
+    """The default CholeskyQR ('gram') factored backend must match the
+    seed loop within 1e-4 relative Frobenius error on every client's
+    effective update, and reproduce the singular spectrum."""
+    tree = _tree(layers=3)
+    eta = jnp.array([1.0, 2.0, 3.0, 4.0])
+    eng = agg_engine.AggregationEngine(use_pallas=False)   # gram default
+    assert eng.factored_impl == "gram"
+    ref = agg.aggregate_tree_reference(tree, eta, ALPHA)
+    got, spectra = eng(tree, eta, ALPHA)
+    for t in tree:
+        for i in range(4):
+            dw_r = np.asarray(lora.delta_w(
+                {k: v[i] for k, v in ref[t].items()}, ALPHA))
+            dw_g = np.asarray(lora.delta_w(
+                {k: v[i] for k, v in got[t].items()}, ALPHA))
+            rel = np.linalg.norm(dw_g - dw_r) / max(np.linalg.norm(dw_r),
+                                                    1e-30)
+            assert rel < 1e-4, (t, i, rel)
+        # spectrum agrees with an exact dense SVD per layer
+        w = np.asarray(agg.reconstruct_global_update(tree[t], eta, ALPHA))
+        for layer in range(3):
+            s_true = np.linalg.svd(w[layer], compute_uv=False)[:8]
+            np.testing.assert_allclose(np.asarray(spectra[t][layer]), s_true,
+                                       rtol=1e-3, atol=1e-4)
+
+
+def test_engine_gram_survives_rank_deficient_cohort():
+    """Regression: in federation every client's factors are truncations of
+    the SAME global adapter, so the stacked P has numerical rank ~r ≪ K·r.
+    A mean-diagonal Cholesky ridge lands below f32 rounding of λmax there
+    and the gram path NaN'd (training collapsed to chance acc). The
+    shifted CholeskyQR2 path must stay finite and match the QR backend."""
+    key = jax.random.PRNGKey(13)
+    k, d_in, d_out, r = 10, 64, 48, 8
+    a0 = jax.random.normal(key, (d_in, r)) * 0.05
+    b0 = jax.random.normal(jax.random.fold_in(key, 1), (r, d_out)) * 0.05
+    ads = {"A": [], "B": [], "mask": []}
+    for i in range(k):   # identical adapters + tiny local-training noise
+        na = 1e-3 * jax.random.normal(jax.random.fold_in(key, 10 + i),
+                                      (d_in, r)) * 0.05
+        nb = 1e-3 * jax.random.normal(jax.random.fold_in(key, 50 + i),
+                                      (r, d_out)) * 0.05
+        ads["A"].append(a0 + na)
+        ads["B"].append(b0 + nb)
+        ads["mask"].append(jnp.ones((r,)))
+    tree = {"q": {k2: jnp.stack(v) for k2, v in ads.items()}}
+    eta = jnp.ones((k,))
+    got, spectra = agg_engine.AggregationEngine(use_pallas=False)(
+        tree, eta, ALPHA)
+    assert bool(jnp.all(jnp.isfinite(got["q"]["A"])))
+    assert bool(jnp.all(jnp.isfinite(got["q"]["B"])))
+    assert bool(jnp.all(jnp.isfinite(spectra["q"])))
+    ref, _ = agg_engine.AggregationEngine(
+        use_pallas=False, factored_impl="qr")(tree, eta, ALPHA)
+    dw_g = np.asarray(lora.delta_w(
+        {k2: v[0] for k2, v in got["q"].items()}, ALPHA))
+    dw_r = np.asarray(lora.delta_w(
+        {k2: v[0] for k2, v in ref["q"].items()}, ALPHA))
+    rel = np.linalg.norm(dw_g - dw_r) / np.linalg.norm(dw_r)
+    assert rel < 1e-4, rel
+
+
+def test_svd_factored_gram_wide_factor():
+    """d < R (wide MLP-down factors): Gram of Qᵀ is singular by
+    construction — pass-2 shift must keep the Cholesky finite."""
+    from repro.core import svd as svd_lib
+    key = jax.random.PRNGKey(21)
+    p = jax.random.normal(key, (40, 32)) * 0.1           # K·r = 32 > d_out
+    q = jax.random.normal(jax.random.fold_in(key, 1), (32, 24)) * 0.1
+    u1, s1, vt1 = svd_lib.svd_factored(p, q, 8)
+    u2, s2, vt2 = svd_lib.svd_factored_gram(p, q, 8)
+    assert bool(jnp.all(jnp.isfinite(u2))) and bool(jnp.all(jnp.isfinite(vt2)))
+    np.testing.assert_allclose(np.asarray((u2 * s2) @ vt2),
+                               np.asarray((u1 * s1) @ vt1),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_svd_factored_gram_masked_zero_columns():
+    """CholeskyQR must survive exactly-zero (masked-client) columns."""
+    from repro.core import svd as svd_lib
+    key = jax.random.PRNGKey(3)
+    p = jax.random.normal(key, (48, 16)) * 0.1
+    q = jax.random.normal(jax.random.fold_in(key, 1), (16, 40)) * 0.1
+    p = p.at[:, 4:8].set(0.0)
+    q = q.at[4:8, :].set(0.0)
+    u1, s1, vt1 = svd_lib.svd_factored(p, q, 8)
+    u2, s2, vt2 = svd_lib.svd_factored_gram(p, q, 8)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s1),
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(np.asarray((u2 * s2) @ vt2),
+                               np.asarray((u1 * s1) @ vt1),
+                               rtol=1e-3, atol=1e-5)
+
+
+def test_engine_pallas_dense_path_interpret():
+    """method='exact' with the recon_agg Pallas kernel (interpret mode on
+    CPU) matches the einsum dense path."""
+    tree = {"q": _stacked(6, k=3, d_in=32, d_out=32)}
+    eta = jnp.array([1.0, 2.0, 1.0])
+    ref_eng = agg_engine.AggregationEngine(use_pallas=False)
+    pal_eng = agg_engine.AggregationEngine(use_pallas=True)
+    ref, _ = ref_eng(tree, eta, ALPHA, method="exact")
+    got, _ = pal_eng(tree, eta, ALPHA, method="exact")
+    _assert_trees_close(got, ref, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Caching: one trace per structure, replay afterwards
+# ---------------------------------------------------------------------------
+
+def test_engine_caches_by_tree_structure():
+    eng = agg_engine.AggregationEngine(use_pallas=False)
+    tree = _tree(layers=2)
+    eta = jnp.ones((4,))
+    eng(tree, eta, ALPHA)
+    t1 = eng.trace_count
+    assert t1 == 1
+    # same structure, new values -> replay, no re-trace
+    tree2 = jax.tree.map(lambda x: x + 0.5, tree)
+    tree2 = {t: {**ad, "mask": tree[t]["mask"]} for t, ad in tree2.items()}
+    eng(tree2, eta, ALPHA)
+    eng(tree2, eta * 2, ALPHA)
+    eng(tree2, eta, ALPHA * 2)   # alpha is a traced scalar, not static
+    assert eng.trace_count == t1
+    # new structure (different layer count) -> one more trace
+    eng(_tree(layers=4), eta, ALPHA)
+    assert eng.trace_count == t1 + 1
+    # different static config -> separate jit entry
+    eng(tree, eta, ALPHA, strategy="naive")
+    assert eng.cache_size() == 2
+
+
+def test_engine_spectrum_matches_exact_svd():
+    tree = {"q": _stacked(8, ranks=[2, 4, 6, 8])}
+    eta = jnp.array([1.0, 2.0, 3.0, 4.0])
+    eng = agg_engine.AggregationEngine(use_pallas=False)
+    _, spectra = eng(tree, eta, ALPHA)
+    w = np.asarray(agg.reconstruct_global_update(tree["q"], eta, ALPHA))
+    s_true = np.linalg.svd(w, compute_uv=False)[:8]
+    np.testing.assert_allclose(np.asarray(spectra["q"]), s_true,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_engine_rejects_unknown_strategy():
+    eng = agg_engine.AggregationEngine(use_pallas=False)
+    with pytest.raises(ValueError):
+        eng(_tree(), jnp.ones((4,)), ALPHA, strategy="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Async submit equivalence: engine-backed server == seed per-target math
+# ---------------------------------------------------------------------------
+
+def test_async_submit_matches_seed_math():
+    """AsyncFedServer.submit (one batched engine call) must produce the
+    same global adapter as the seed per-target aggregate_hlora loop."""
+    from repro.configs import get_reduced
+    from repro.fed import ServerConfig
+    from repro.fed.async_server import AsyncConfig, AsyncFedServer
+    from repro.fed.simulation import SimConfig, pretrain_backbone
+
+    cfg = get_reduced("roberta-large")
+    sim = SimConfig(num_examples=256, pretrain_steps=0, seed=0)
+    base = pretrain_backbone(cfg, sim)
+    scfg = ServerConfig(num_clients=2, clients_per_round=2, seed=0)
+    server = AsyncFedServer(cfg, scfg, AsyncConfig(), base, [1.0, 1.0],
+                            engine=agg_engine.AggregationEngine(
+                                use_pallas=False, factored_impl="qr"))
+
+    # fake a trained client update
+    ad, ver = server.adapter_for(0)
+    key = jax.random.PRNGKey(5)
+    trained = {t: {**a, "B": jax.random.normal(
+        jax.random.fold_in(key, i), a["B"].shape) * a["mask"][..., :, None]}
+        for i, (t, a) in enumerate(sorted(ad.items()))}
+
+    # seed math, replicated: stack [global, client], per-target hlora
+    w = server.acfg.base_weight
+    eta = jnp.array([1.0 - w, w], jnp.float32)
+    expected = {}
+    for t, g in server.global_lora.items():
+        stacked = {k2: jnp.stack([g[k2], trained[t][k2]])
+                   for k2 in ("A", "B", "mask")}
+        out = agg.aggregate_hlora(
+            stacked, eta, cfg.lora.alpha,
+            new_masks=jnp.ones_like(stacked["mask"][:1]), method="factored")
+        expected[t] = {k2: v[0] for k2, v in out.items()}
+
+    assert server.submit(0, trained, ver) is True
+    for t in expected:
+        for leaf in ("A", "B", "mask"):
+            np.testing.assert_allclose(
+                np.asarray(server.global_lora[t][leaf]),
+                np.asarray(expected[t][leaf]), rtol=2e-4, atol=1e-5,
+                err_msg=f"{t}/{leaf}")
+
+
+# ---------------------------------------------------------------------------
+# adapt_ranks regression: spectrum must be split-invariant
+# ---------------------------------------------------------------------------
+
+def _spectrum_server(cfg, base, split):
+    from repro.fed import FedServer, ServerConfig
+    scfg = ServerConfig(num_clients=6, clients_per_round=3,
+                        strategy="hlora", rank_policy="spectrum",
+                        split=split, r_min=2, r_max=8, seed=0)
+    return FedServer(cfg, scfg, base, client_sizes=np.full(6, 32),
+                     engine=agg_engine.AggregationEngine(use_pallas=False))
+
+
+def test_adapt_ranks_split_invariant():
+    """Seed bug: adapt_ranks read σ from B' row norms, which are σ under
+    'paper' but √σ under 'sqrt' — the energy cutoff then picked the wrong
+    rank. With the engine surfacing Σ directly, both splits must adapt to
+    the same rank."""
+    from repro.configs import get_reduced
+    from repro.fed.simulation import SimConfig, pretrain_backbone
+    cfg = get_reduced("roberta-large")
+    base = pretrain_backbone(cfg, SimConfig(num_examples=256,
+                                            pretrain_steps=0, seed=0))
+    key = jax.random.PRNGKey(11)
+    picked = {}
+    for split in ("paper", "sqrt"):
+        server = _spectrum_server(cfg, base, split)
+        cohort = np.array([0, 2, 4])
+        stacked = server.cohort_adapters(cohort)
+        for t in stacked:   # plant a rank-2 signal
+            b = stacked[t]["B"]
+            u = jax.random.normal(jax.random.fold_in(key, hash(t) % 50),
+                                  (*b.shape[:-2], 2, b.shape[-1]))
+            stacked[t]["B"] = jnp.concatenate(
+                [u, jnp.zeros((*b.shape[:-2], b.shape[-2] - 2,
+                               b.shape[-1]))], axis=-2) \
+                * stacked[t]["mask"][..., :, None]
+        server.update_global(stacked, cohort)
+        assert server.last_spectrum is not None
+        picked[split] = int(server.ranks[0])
+    assert picked["paper"] == picked["sqrt"], picked
+
+
+def test_adapt_ranks_pools_energy_not_sigma():
+    """Cross-target pooling must average *energies* (σ², as the seed did):
+    with dissimilar target spectra, pooling σ first and squaring after
+    moves the cutoff."""
+    from repro.configs import get_reduced
+    from repro.fed.simulation import SimConfig, pretrain_backbone
+    cfg = get_reduced("roberta-large")
+    base = pretrain_backbone(cfg, SimConfig(num_examples=256,
+                                            pretrain_steps=0, seed=0))
+    server = _spectrum_server(cfg, base, "paper")
+    spec_q = np.array([10.0, 0.1, 0.1, 0.1, 1e-4, 1e-4, 1e-4, 1e-4])
+    spec_v = np.array([1.0, 1.0, 1.0, 1.0, 1e-4, 1e-4, 1e-4, 1e-4])
+    server.last_spectrum = {"q": jnp.asarray(np.tile(spec_q, (2, 1))),
+                            "v": jnp.asarray(np.tile(spec_v, (2, 1)))}
+    server.adapt_ranks()
+    s2 = (spec_q ** 2 + spec_v ** 2) / 2          # seed pooling
+    cum = np.cumsum(s2) / s2.sum()
+    expected = int(np.clip(np.searchsorted(cum, 0.95) + 1, 2, 8))
+    assert int(server.ranks[0]) == expected, (server.ranks[0], expected)
+
+
+def test_adapt_ranks_fallback_normalizes_per_split():
+    """Without an engine spectrum (e.g. restored server), the factor-norm
+    fallback must square the √σ row norms under 'sqrt'."""
+    from repro.configs import get_reduced
+    from repro.fed.simulation import SimConfig, pretrain_backbone
+    cfg = get_reduced("roberta-large")
+    base = pretrain_backbone(cfg, SimConfig(num_examples=256,
+                                            pretrain_steps=0, seed=0))
+    # Plant a known spectrum: B' rows with norms s (paper) or sqrt(s) (sqrt)
+    s = np.array([8.0, 4.0, 1e-3, 1e-3, 1e-3, 1e-3, 1e-3, 1e-3])
+    picked = {}
+    for split in ("paper", "sqrt"):
+        server = _spectrum_server(cfg, base, split)
+        server.last_spectrum = None
+        rows = s if split == "paper" else np.sqrt(s)
+        for t, ad in server.global_lora.items():
+            b = np.zeros(np.asarray(ad["B"]).shape, np.float32)
+            b[..., 0] = rows     # broadcast over any leading layer axis
+            server.global_lora[t]["B"] = jnp.asarray(b)
+        server.adapt_ranks()
+        picked[split] = int(server.ranks[0])
+    assert picked["paper"] == picked["sqrt"] == 2, picked

@@ -80,6 +80,36 @@ def test_flash_matches_model_attention():
                                rtol=2e-4, atol=2e-4)
 
 
+def test_ops_shape_padding_odd_lora_matmul():
+    """Wrappers must pad non-MXU-aligned (M, K, N) and slice back — the
+    raw kernel hard-asserts block divisibility (192 % 128 != 0 etc.)."""
+    ks = jax.random.split(KEY, 4)
+    m, k, n, r = 192, 384, 320, 8
+    x = jax.random.normal(ks[0], (m, k))
+    w0 = jax.random.normal(ks[1], (k, n))
+    a = jax.random.normal(ks[2], (k, r)) * 0.1
+    b = jax.random.normal(ks[3], (r, n)) * 0.1
+    y = ops.lora_matmul(x, w0, a, b, 1.5, block_m=128, block_n=128,
+                        block_k=128)
+    assert y.shape == (m, n)
+    yr = ref.lora_matmul_ref(x, w0, a, b, 1.5)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ops_shape_padding_odd_recon_agg():
+    ks = jax.random.split(KEY, 3)
+    kc, d_in, r, d_out = 5, 192, 8, 320
+    a = jax.random.normal(ks[0], (kc, d_in, r))
+    b = jax.random.normal(ks[1], (kc, r, d_out))
+    eta = jax.nn.softmax(jax.random.normal(ks[2], (kc,)))
+    w = ops.recon_agg(a, b, eta, block_m=128, block_n=128)
+    assert w.shape == (d_in, d_out)
+    wr = ref.recon_agg_ref(a, b, eta)
+    np.testing.assert_allclose(np.asarray(w), np.asarray(wr),
+                               rtol=2e-4, atol=2e-4)
+
+
 def test_ops_rank_padding():
     """ops wrappers pad r<128 to lane width with zero extra contribution."""
     ks = jax.random.split(KEY, 4)

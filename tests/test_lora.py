@@ -30,7 +30,9 @@ def test_rank_mask_semantics(rng_key):
     dw = lora.delta_w(ad, ALPHA)
     # manual: only first 3 columns/rows participate, scale alpha/3
     manual = (ALPHA / 3.0) * ad["A"][:, :3] @ ad["B"][:3, :]
-    np.testing.assert_allclose(dw, manual, rtol=1e-5)
+    # f32 matmul accumulation order differs between the masked r_max
+    # contraction and the sliced rank-3 one — tolerance, not exactness.
+    np.testing.assert_allclose(dw, manual, rtol=1e-4, atol=1e-6)
     # changing masked entries must not change delta_w
     ad2 = dict(ad)
     ad2["A"] = ad["A"].at[:, 3:].set(99.0)
