@@ -5,10 +5,12 @@
   server        bench_server      — aggregation strategy cost
   comm          bench_comm        — per-round communication volume (C4)
   svd           bench_svd         — SVD back-end scaling
+  serve         bench_serve       — multi-LoRA serving throughput
   roofline      bench_roofline    — 3-term roofline from the dry-run
 
 Output: CSV lines ``name,us_per_call,derived`` + markdown tables,
-mirrored to results/bench_results.json.
+merged into results/bench_results.json (sections not re-run this
+invocation keep their previous numbers).
 
   PYTHONPATH=src python -m benchmarks.run [--only svd,comm] [--quick]
 """
@@ -23,9 +25,10 @@ import time
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_bias, bench_comm, bench_convergence,
-                        bench_roofline, bench_server, bench_svd)
+                        bench_roofline, bench_serve, bench_server,
+                        bench_svd)
 
-ALL = ("convergence", "bias", "server", "comm", "svd", "roofline")
+ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline")
 
 
 def main() -> None:
@@ -46,6 +49,8 @@ def main() -> None:
         results["svd"] = bench_svd.run(quick=args.quick)
     if "server" in which:
         results["server"] = bench_server.run(quick=args.quick)
+    if "serve" in which:
+        results["serve"] = bench_serve.run(quick=args.quick)
     if "bias" in which:
         results["bias"] = bench_bias.run(quick=args.quick)
     if "roofline" in which:
@@ -63,8 +68,16 @@ def main() -> None:
         print(bench_convergence.table1(conv))
 
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    merged = {}
+    if os.path.exists(args.out):  # keep sections not re-run this time
+        try:
+            with open(args.out) as f:
+                merged = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            pass  # corrupt/partial previous file: overwrite, don't crash
+    merged.update(results)
     with open(args.out, "w") as f:
-        json.dump(results, f, indent=1, default=float)
+        json.dump(merged, f, indent=1, default=float)
     print(f"\n[benchmarks] done in {time.time() - t0:.1f}s -> {args.out}")
 
 

@@ -2,12 +2,14 @@
 
   lora_matmul — fused y = xW0 + s·(xA)B (adapter rides the base tiles)
   recon_agg   — W' = Σ η_k A_k B_k (HLoRA server aggregation, Eq. 2)
+  bgmv        — y[i] = x[i] A[idx[i]] B[idx[i]] (multi-LoRA serving decode)
   flash_attn  — online-softmax attention (causal + sliding window)
 
 Each has a pure-jnp oracle in ref.py and a jit'd public wrapper in ops.py
 (rank padding to lane width, batching, interpret-mode fallback on CPU).
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import flash_attention, lora_matmul, recon_agg
+from repro.kernels.ops import bgmv, flash_attention, lora_matmul, recon_agg
 
-__all__ = ["ops", "ref", "flash_attention", "lora_matmul", "recon_agg"]
+__all__ = ["ops", "ref", "bgmv", "flash_attention", "lora_matmul",
+           "recon_agg"]

@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.bgmv import bgmv as _bgmv
 from repro.kernels.flash_attn import flash_attention as _flash
 from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
 from repro.kernels.recon_agg import recon_agg as _recon_agg
@@ -95,6 +96,33 @@ def recon_agg(a, b, eta, *, interpret: Optional[bool] = None,
         b = _pad_axis(b, 2, op)
     w = _recon_agg(a, b, eta, block_m=bm, block_n=bn, interpret=interpret)
     return w[:d_in, :d_out] if (ip, op) != (d_in, d_out) else w
+
+
+def bgmv(x, a, b, idx, *, interpret: Optional[bool] = None,
+         block_n: int = 256):
+    """Batched-gather multi-LoRA decode: y[i] = x[i] @ A[idx[i]] @ B[idx[i]].
+
+    x: (B, d_in), a: (S, d_in, R), b: (S, R, d_out), idx: (B,) int32.
+    Pads d_in/d_out/R up to lane multiples (zero rows/cols and zero rank
+    directions contribute nothing) and slices the result back. Rank masks
+    and the alpha/r_eff scale are the caller's business — fold the mask
+    into ``a`` first (see serve/engine.py)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    r = a.shape[-1]
+    rp = _ceil_to(r, 128)  # _pad_rank only handles r < lanes
+    if rp != r:
+        a = _pad_axis(a, 2, rp)
+        b = _pad_axis(b, 1, rp)
+    d_in, d_out = x.shape[1], b.shape[-1]
+    bn = _eff_block(d_out, block_n)
+    ip, op = _ceil_to(d_in, 128), _ceil_to(d_out, bn)
+    if ip != d_in:
+        x = _pad_axis(x, 1, ip)
+        a = _pad_axis(a, 1, ip)
+    if op != d_out:
+        b = _pad_axis(b, 2, op)
+    y = _bgmv(x, a, b, idx, block_n=bn, interpret=interpret)
+    return y[:, :d_out] if op != d_out else y
 
 
 def flash_attention(q, k, v, *, causal=True, window=None,

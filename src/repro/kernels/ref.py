@@ -21,6 +21,14 @@ def recon_agg_ref(a: jax.Array, b: jax.Array, eta: jax.Array) -> jax.Array:
     return jnp.einsum("k,kir,kro->io", eta, a, b)
 
 
+def bgmv_ref(x: jax.Array, a: jax.Array, b: jax.Array, idx: jax.Array
+             ) -> jax.Array:
+    """y[i] = x[i] @ A[idx[i]] @ B[idx[i]] (multi-LoRA decode gather).
+    x: (B, d_in), a: (S, d_in, R), b: (S, R, d_out), idx: (B,) int32."""
+    xa = jnp.einsum("bd,bdr->br", x, a[idx])
+    return jnp.einsum("br,bro->bo", xa, b[idx])
+
+
 def flash_attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     window: Optional[int] = None,

@@ -1,0 +1,40 @@
+"""Multi-tenant adapter serving — the consumer of everything ``fed/`` makes.
+
+HLoRA's output is a fleet of per-client LoRA adapters with *different*
+ranks.  Serving them to real traffic means batching requests that carry
+different adapters through one compiled decode.  This package is that
+path, in three layers:
+
+  registry.py — AdapterRegistry: loads heterogeneous-rank adapters (from
+                memory or ``checkpoint/store.py``) into fixed-shape slab
+                slots with LRU eviction and retrace-free hot-swap.
+  engine.py   — ServeEngine: continuous-batching greedy decoder; one
+                jitted step where every request row gathers its own
+                adapter out of the slabs (BGMV).
+  oracle.py   — reference per-request decodes (factored + merged-weight)
+                the engine is pinned against, plus the shared demo-
+                adapter fixture.
+  kernels/bgmv.py — the Pallas TPU gather kernel behind that step.
+
+Slab / mask layout
+------------------
+jit caches on pytree *structure*, so adapters must share one shape no
+matter their rank.  Every target's slab is allocated at a fixed
+``r_slab`` with ``S`` slots and a leading layer axis (so the decode
+``lax.scan`` slices per-layer blocks for free):
+
+    A:    (L, S, d_in, r_slab)     B: (L, S, r_slab, d_out)
+    mask: (L, S, r_slab)           mask[l, s, i] = 1 iff i < rank(s)
+
+A rank-r adapter occupies the first r columns of its slot; the rest are
+zero-padded and masked out, contributing exactly zero to
+ΔW = (A·m) @ B while keeping the per-slot scale alpha / r_eff faithful
+to what that client trained with (same trick as ``core/lora.py``'s
+cohort masks).  Admitting, evicting, or hot-swapping an adapter is a
+``.at[slot].set`` value update — shapes never change, so the serving
+step never retraces.
+"""
+from repro.serve.engine import ServeEngine
+from repro.serve.registry import AdapterRegistry
+
+__all__ = ["AdapterRegistry", "ServeEngine"]

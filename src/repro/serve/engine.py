@@ -1,0 +1,265 @@
+"""Multi-tenant serving engine: continuous batching over per-request LoRA.
+
+One jitted decode step serves the whole batch. Each of the ``max_batch``
+request rows carries its own adapter-slot index into the registry slabs;
+inside every layer the LoRA path is the BGMV gather
+
+    y[i] = x[i] @ W0 + scale[idx[i]] · (x[i] @ A[idx[i]]) @ B[idx[i]]
+
+(Pallas ``kernels/bgmv.py`` on TPU, the gather-einsum oracle elsewhere).
+Prefill and decode share the step: prompts are teacher-forced token by
+token, so a row mid-prefill and a row deep into generation coexist in
+one batch — per-row absolute positions drive RoPE and per-row KV-cache
+slot insertion, and attention masks on cached validity rather than a
+shared scalar position.  Finished rows are recycled immediately
+(continuous batching): the scheduler resets that row's cache validity,
+pulls the next queued request, and pins its adapter via the registry —
+all value updates against fixed shapes, so ``trace_count`` stays flat
+across admissions, evictions, and hot-swaps.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import (_act, attention, init_kv_cache, rope,
+                                 sinusoidal_positions)
+from repro.models.transformer import norm
+
+
+def _apply_slab_lora(x, w0, slab, idx, alpha, use_pallas: bool):
+    """x: (B, 1, d_in) -> x @ W0 + per-row gathered LoRA delta."""
+    y = x @ w0
+    if slab is None:
+        return y
+    a, b, m = slab["A"], slab["B"], slab["mask"]     # (S,d,r) (S,r,o) (S,r)
+    am = a * m[:, None, :]                            # dead directions -> 0
+    scale = alpha / jnp.maximum(jnp.sum(m, axis=-1), 1.0)          # (S,)
+    xr = x[:, 0, :]
+    if use_pallas:
+        from repro.kernels import ops
+        lo = ops.bgmv(xr, am, b, idx)
+    else:
+        lo = jnp.einsum("br,bro->bo", jnp.einsum("bd,bdr->br", xr, am[idx]),
+                        b[idx])
+    return y + (scale[idx][:, None] * lo)[:, None, :].astype(y.dtype)
+
+
+def _cache_insert_rows(lc, k_new, v_new, pos):
+    """Per-row insert: row i's token goes to slot pos[i] % slots.
+    k_new/v_new: (B, 1, Hkv, Dh), pos: (B,) absolute positions."""
+    slots = lc["k"].shape[1]
+    rows = jnp.arange(pos.shape[0])
+    slot = pos % slots
+    return {
+        "k": lc["k"].at[rows, slot].set(k_new[:, 0]),
+        "v": lc["v"].at[rows, slot].set(v_new[:, 0]),
+        "pos": lc["pos"].at[rows, slot].set(pos),
+    }
+
+
+def _layer_decode(x, lp, slab, lc, idx, pos, cfg: ModelConfig,
+                  use_pallas: bool):
+    """One token through one layer, per-row adapters and positions."""
+    alpha = cfg.lora.alpha
+    bsz = x.shape[0]
+    hd = cfg.resolved_head_dim
+    ap = lp["attn"]
+    h = norm(x, lp["ln1"])
+    q = _apply_slab_lora(h, ap["wq"], slab.get("q"), idx, alpha, use_pallas)
+    k = _apply_slab_lora(h, ap["wk"], slab.get("k"), idx, alpha, use_pallas)
+    v = _apply_slab_lora(h, ap["wv"], slab.get("v"), idx, alpha, use_pallas)
+    if cfg.use_bias:
+        q, k, v = q + ap.get("bq", 0.0), k + ap.get("bk", 0.0), \
+            v + ap.get("bv", 0.0)
+    q = q.reshape(bsz, 1, cfg.num_heads, hd)
+    k = k.reshape(bsz, 1, cfg.num_kv_heads, hd)
+    v = v.reshape(bsz, 1, cfg.num_kv_heads, hd)
+    if cfg.rope_theta > 0:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    lc = _cache_insert_rows(lc, k, v, pos)
+    # Validity-masked attention: each row sees exactly its own cached
+    # prefix (stale slots are pos=-1, recycled rows were reset) — the
+    # causal structure is in the mask, not a shared scalar position.
+    valid = (lc["pos"] >= 0) & (lc["pos"] <= pos[:, None])
+    o = attention(q, lc["k"], lc["v"], causal=False, window=None,
+                  kv_positions=lc["pos"], kv_valid=valid)
+    o = o.reshape(bsz, 1, cfg.num_heads * hd)
+    y = _apply_slab_lora(o, ap["wo"], slab.get("o"), idx, alpha, use_pallas)
+    if cfg.use_bias and "bo" in ap:
+        y = y + ap["bo"]
+    x = x + y
+    h2 = norm(x, lp["ln2"])
+    mp = lp["mlp"]
+    act = _act(cfg.activation)
+    u = _apply_slab_lora(h2, mp["w1"], slab.get("w1"), idx, alpha, use_pallas)
+    if cfg.use_bias and "b1" in mp:
+        u = u + mp["b1"]
+    u = act(u)
+    if "w3" in mp:
+        u = u * _apply_slab_lora(h2, mp["w3"], slab.get("w3"), idx, alpha,
+                                 use_pallas)
+    y = _apply_slab_lora(u, mp["w2"], slab.get("w2"), idx, alpha, use_pallas)
+    if cfg.use_bias and "b2" in mp:
+        y = y + mp["b2"]
+    return x + y, lc
+
+
+class ServeEngine:
+    """Continuous-batching multi-LoRA greedy decoder.
+
+    ``max_batch`` request rows share one jitted step whose cache keys on
+    (batch, seq, slab, param) shapes only — request churn never
+    recompiles. Greedy sampling; the scheduler is host-side (admission,
+    token routing, finish/recycle), everything per-token is on device.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, registry, *,
+                 max_batch: int = 8, max_seq: int = 128,
+                 use_pallas: Optional[bool] = None,
+                 cache_dtype=jnp.float32):
+        if cfg.arch_type not in ("dense", "vlm"):
+            raise NotImplementedError(
+                f"serving supports the dense transformer family, got "
+                f"{cfg.arch_type!r}")
+        if cfg.num_experts:
+            raise NotImplementedError("MoE serving not wired yet")
+        self.params = params
+        self.cfg = cfg
+        self.registry = registry
+        self.max_batch = int(max_batch)
+        self.max_seq = int(max_seq)
+        if use_pallas is None:
+            from repro.kernels import ops
+            use_pallas = ops.on_tpu()
+        self.use_pallas = bool(use_pallas)
+        self.cache = init_kv_cache(cfg.num_layers, self.max_batch,
+                                   self.max_seq, cfg.num_kv_heads,
+                                   cfg.resolved_head_dim, dtype=cache_dtype)
+        self.trace_count = 0
+        self._step = jax.jit(self._step_impl)
+        self._reset = jax.jit(self._reset_impl)
+        self._queue: deque = deque()
+        self._rows: List[Optional[dict]] = [None] * self.max_batch
+        self._done: Dict[str, np.ndarray] = {}
+        self._uid = 0
+        self.steps = 0
+        self.tokens_generated = 0
+
+    # -- jitted bodies ------------------------------------------------------
+
+    def _step_impl(self, params, slabs, cache, idx, tokens, pos):
+        """tokens: (B,1) int32, pos: (B,) int32, idx: (B,) int32 slab slots
+        -> (logits (B,V), cache)."""
+        self.trace_count += 1   # side effect fires at trace time only
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)          # (B,1,d)
+        if cfg.rope_theta == 0:
+            x = x * math.sqrt(cfg.d_model) + sinusoidal_positions(
+                pos[:, None], cfg.d_model).astype(x.dtype)
+
+        def scan_body(carry, xs):
+            lp, slab_l, lc = xs
+            y, new_lc = _layer_decode(carry, lp, slab_l, lc, idx, pos, cfg,
+                                      self.use_pallas)
+            return y, new_lc
+
+        x, new_cache = lax.scan(scan_body, x,
+                                (params["layers"], slabs, cache))
+        x = norm(x, params["final_norm"])
+        head = params.get("lm_head")
+        logits = x[:, 0, :] @ (head if head is not None
+                               else params["embed"].T)
+        return logits, new_cache
+
+    @staticmethod
+    def _reset_impl(cache, row_mask):
+        """Invalidate the KV prefix of recycled rows (value-only update)."""
+        pos = jnp.where(row_mask[None, :, None], -1, cache["pos"])
+        return {**cache, "pos": pos}
+
+    # -- scheduler ----------------------------------------------------------
+
+    def submit(self, prompt, adapter_id: str,
+               max_new_tokens: int = 16) -> str:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size + max_new_tokens > self.max_seq:
+            raise ValueError(
+                f"prompt+generation {prompt.size + max_new_tokens} exceeds "
+                f"max_seq {self.max_seq}")
+        if not self.registry.has(adapter_id):
+            raise KeyError(f"unknown adapter {adapter_id!r}")
+        uid = f"req{self._uid}"
+        self._uid += 1
+        self._queue.append({"uid": uid, "prompt": prompt, "out": [],
+                            "t": 0, "max_new": int(max_new_tokens),
+                            "adapter": adapter_id})
+        return uid
+
+    def _admit(self) -> None:
+        freed = np.zeros((self.max_batch,), bool)
+        any_freed = False
+        for row in range(self.max_batch):
+            if self._rows[row] is None and self._queue:
+                try:
+                    slot = self.registry.acquire(self._queue[0]["adapter"])
+                except RuntimeError:
+                    break   # every slab slot pinned: wait for a release
+                req = self._queue.popleft()
+                req["slot"] = slot
+                self._rows[row] = req
+                freed[row] = True
+                any_freed = True
+        if any_freed:
+            self.cache = self._reset(self.cache, jnp.asarray(freed))
+
+    def step_batch(self) -> None:
+        """Admit, run one decode step, harvest/advance/recycle."""
+        self._admit()
+        active = [(i, r) for i, r in enumerate(self._rows) if r is not None]
+        if not active:
+            if self._queue:
+                # no row made progress and none will: every slab slot is
+                # pinned by someone outside this engine
+                raise RuntimeError(
+                    f"{len(self._queue)} queued requests but no adapter "
+                    f"slot can be acquired and no row is active")
+            return
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        pos = np.zeros((self.max_batch,), np.int32)
+        idx = np.zeros((self.max_batch,), np.int32)
+        for i, req in active:
+            t = req["t"]
+            tokens[i, 0] = req["prompt"][t] if t < req["prompt"].size \
+                else req["out"][-1]
+            pos[i] = t
+            idx[i] = req["slot"]
+        logits, self.cache = self._step(
+            self.params, self.registry.slabs(), self.cache,
+            jnp.asarray(idx), jnp.asarray(tokens), jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+        for i, req in active:
+            req["t"] += 1
+            if req["t"] >= req["prompt"].size:       # past prefill: sample
+                req["out"].append(int(nxt[i]))
+                self.tokens_generated += 1
+            if len(req["out"]) >= req["max_new"]:    # finished: recycle row
+                self._done[req["uid"]] = np.asarray(req["out"], np.int32)
+                self.registry.release(req["adapter"])
+                self._rows[i] = None
+
+    def run(self) -> Dict[str, np.ndarray]:
+        """Drive until every submitted request has finished."""
+        while self._queue or any(r is not None for r in self._rows):
+            self.step_batch()
+        out, self._done = self._done, {}
+        return out

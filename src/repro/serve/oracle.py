@@ -1,0 +1,91 @@
+"""Reference serving paths — the allclose/exact-match oracles for the
+engine (same role kernels/ref.py plays for the Pallas kernels), plus the
+demo-adapter fixture shared by the example, the benchmark, and the tests
+so they cannot drift apart.
+
+Both oracles decode greedily one request at a time through the stock
+``model_lib.decode_step``:
+
+  factored_greedy — adapter kept in factored form (the naive serving
+                    loop the engine replaces).
+  merged_greedy   — adapter folded into the base weights first (zero
+                    adapter overhead per step, one weight copy per
+                    adapter — the trade the engine avoids).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import lora as lora_lib
+from repro.models import model as model_lib
+from repro.models import transformer as tf_lib
+
+# LoRA target -> (param group, weight name). Covers every target the
+# dense-family serving engine supports, attention and MLP alike.
+TARGET_PARAM = {
+    "q": ("attn", "wq"), "k": ("attn", "wk"), "v": ("attn", "wv"),
+    "o": ("attn", "wo"),
+    "w1": ("mlp", "w1"), "w2": ("mlp", "w2"), "w3": ("mlp", "w3"),
+}
+
+# One jit cache shared by every oracle call in the process — a fresh
+# jitted lambda per request would recompile per request and benchmark
+# the compiler instead of the decode.
+_decode_step = jax.jit(model_lib.decode_step, static_argnames=("cfg",))
+
+
+def make_demo_adapter(key: jax.Array, cfg: ModelConfig, rank: int):
+    """A trained-looking client adapter: gaussian A (init), small random
+    B (stands in for training), masked to ``rank``. Per-target keys come
+    from the *sorted* target enumeration — ``hash(name)`` varies with
+    PYTHONHASHSEED and made runs irreproducible."""
+    tree = tf_lib.init_lora(key, cfg, rank=rank)
+    for i, t in enumerate(sorted(tree)):
+        tree[t]["B"] = jax.random.normal(
+            jax.random.fold_in(key, 1000 + i),
+            tree[t]["B"].shape) * 0.05 * tree[t]["mask"][:, :, None]
+    return tree
+
+
+def merge_adapter(params, cfg: ModelConfig, tree):
+    """Fold ``tree`` into a copy of ``params`` and zero the live adapter."""
+    merged = jax.tree.map(lambda x: x, params)
+    for t, ad in tree.items():
+        group, name = TARGET_PARAM[t]
+        w = merged["layers"][group][name]
+        merged["layers"][group][name] = lora_lib.merge(w, ad,
+                                                       cfg.lora.alpha)
+        merged["lora"][t] = dict(ad, B=jnp.zeros_like(ad["B"]))
+    return merged
+
+
+def factored_greedy(params, cfg: ModelConfig, prompt, tree, steps: int
+                    ) -> np.ndarray:
+    """Batch-1 greedy decode with the adapter in factored form (prompt
+    teacher-forced token by token, then ``steps`` generated tokens)."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    p = dict(params, lora=tree)
+    cache = model_lib.init_cache(cfg, 1, prompt.size + steps, jnp.float32)
+    logits = None
+    for t in range(prompt.size):
+        logits, cache = _decode_step(p, cache,
+                                     jnp.asarray(prompt[None, t:t + 1]),
+                                     jnp.int32(t), cfg)
+    out = []
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for s in range(steps):
+        out.append(int(tok[0, 0]))
+        logits, cache = _decode_step(p, cache, tok,
+                                     jnp.int32(prompt.size + s), cfg)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    return np.asarray(out, np.int32)
+
+
+def merged_greedy(params, cfg: ModelConfig, prompt, tree, steps: int
+                  ) -> np.ndarray:
+    """Per-request merge-then-decode (the deployment-merge oracle)."""
+    merged = merge_adapter(params, cfg, tree)
+    return factored_greedy(merged, cfg, prompt, merged["lora"], steps)

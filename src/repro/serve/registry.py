@@ -1,0 +1,183 @@
+"""Adapter registry: heterogeneous-rank LoRA adapters -> fixed-shape slabs.
+
+The registry owns ``capacity`` device-resident slab *slots* per LoRA
+target.  An adapter (one federated client's personalized tree, as
+``fed/`` produces and ``checkpoint/store.py`` persists) is admitted into
+a slot by zero-padding its factors up to the slab rank and recording its
+true rank in the slab's binary mask — the same static-shape trick
+``core/lora.py`` uses for cohort vmap, so the slab pytree structure (and
+therefore every jit cache keyed on it) never changes as adapters come
+and go.  Loading, evicting, and hot-swapping are pure ``.at[slot].set``
+value updates: **zero retraces** by construction.
+
+Slab layout per target (layer-major so the decode ``lax.scan`` over
+layers slices it for free):
+
+    A:    (L, S, d_in, r_slab)      zero-padded input factor
+    B:    (L, S, r_slab, d_out)     zero-padded output factor
+    mask: (L, S, r_slab)            mask[l, s, i] = 1  iff  i < r_adapter
+
+Slot replacement is LRU over un-pinned slots; ``acquire`` pins (serving
+requests hold their adapter), ``release`` unpins.  Sources are either
+in-memory trees (``register``) or lazy checkpoint references
+(``register_checkpoint``), reloaded transparently after an eviction.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf_lib
+
+LoraTree = Dict[str, Dict[str, jax.Array]]  # {target: {"A","B","mask"}}
+
+
+class AdapterRegistry:
+    def __init__(self, cfg: ModelConfig, capacity: int = 8,
+                 r_slab: Optional[int] = None, dtype=jnp.float32):
+        self.cfg = cfg
+        self.capacity = int(capacity)
+        self.r_slab = int(r_slab or cfg.lora.r_max)
+        self.dtype = dtype
+        self._specs = tf_lib.lora_specs(cfg)
+        L = cfg.num_layers
+        self._slabs: Dict[str, Dict[str, jax.Array]] = {
+            t: {
+                "A": jnp.zeros((L, self.capacity, d_in, self.r_slab), dtype),
+                "B": jnp.zeros((L, self.capacity, self.r_slab, d_out), dtype),
+                "mask": jnp.zeros((L, self.capacity, self.r_slab), dtype),
+            }
+            for t, (d_in, d_out) in sorted(self._specs.items())
+        }
+        self._sources: Dict[str, Callable[[], LoraTree]] = {}
+        self._lru: "OrderedDict[str, int]" = OrderedDict()  # id -> slot
+        self._pins: Dict[str, int] = {}
+        self.loads = 0       # slab writes (admissions + hot-swaps)
+        self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+
+    # -- sources ------------------------------------------------------------
+
+    def register(self, adapter_id: str, tree: LoraTree) -> None:
+        """In-memory source. The tree is captured by reference; call
+        ``refresh`` after mutating it to push new values into a live slot."""
+        self._validate(adapter_id, tree)
+        self._sources[adapter_id] = lambda: tree
+
+    def register_checkpoint(self, adapter_id: str, ckpt_dir: str,
+                            step: Optional[int] = None) -> None:
+        """Lazy source backed by checkpoint/store.py — nothing is read
+        until the adapter is first acquired (or re-admitted post-evict)."""
+        def load() -> LoraTree:
+            tree, _meta = store.restore(ckpt_dir, step)
+            self._validate(adapter_id, tree)
+            return tree
+        self._sources[adapter_id] = load
+
+    def _validate(self, adapter_id: str, tree: LoraTree) -> None:
+        if set(tree) != set(self._specs):
+            raise ValueError(
+                f"adapter {adapter_id!r} targets {sorted(tree)} != "
+                f"config targets {sorted(self._specs)}")
+        L = self.cfg.num_layers
+        for t, (d_in, d_out) in self._specs.items():
+            a, b = tree[t]["A"], tree[t]["B"]
+            r = a.shape[-1]
+            if a.shape != (L, d_in, r) or b.shape != (L, r, d_out):
+                raise ValueError(
+                    f"adapter {adapter_id!r} target {t!r}: A{a.shape} "
+                    f"B{b.shape} vs expected L={L} d_in={d_in} d_out={d_out}")
+            if r > self.r_slab:
+                raise ValueError(
+                    f"adapter {adapter_id!r} rank {r} exceeds slab rank "
+                    f"{self.r_slab}")
+
+    # -- slots --------------------------------------------------------------
+
+    def acquire(self, adapter_id: str) -> int:
+        """Pin the adapter into a slot (loading on miss) and return it."""
+        slot = self._lru.get(adapter_id)
+        if slot is not None:
+            self.hits += 1
+            self._lru.move_to_end(adapter_id)
+        else:
+            self.misses += 1
+            slot = self._admit(adapter_id)
+        self._pins[adapter_id] = self._pins.get(adapter_id, 0) + 1
+        return slot
+
+    def release(self, adapter_id: str) -> None:
+        n = self._pins.get(adapter_id, 0) - 1
+        if n <= 0:
+            self._pins.pop(adapter_id, None)
+        else:
+            self._pins[adapter_id] = n
+
+    def refresh(self, adapter_id: str) -> None:
+        """Hot-swap: re-read the source into the adapter's live slot (a
+        value-only ``.at[slot].set`` — shapes fixed, nothing retraces)."""
+        slot = self._lru.get(adapter_id)
+        if slot is None:
+            raise KeyError(f"adapter {adapter_id!r} is not resident")
+        self._write_slot(slot, self._sources[adapter_id]())
+
+    def _admit(self, adapter_id: str) -> int:
+        if adapter_id not in self._sources:
+            raise KeyError(f"unknown adapter {adapter_id!r}")
+        if len(self._lru) < self.capacity:
+            slot = len(self._lru)
+        else:
+            victim = next((aid for aid in self._lru
+                           if not self._pins.get(aid)), None)
+            if victim is None:
+                raise RuntimeError(
+                    f"all {self.capacity} slots pinned; cannot admit "
+                    f"{adapter_id!r}")
+            slot = self._lru.pop(victim)
+            self.evictions += 1
+        self._write_slot(slot, self._sources[adapter_id]())
+        self._lru[adapter_id] = slot
+        return slot
+
+    def _write_slot(self, slot: int, tree: LoraTree) -> None:
+        for t, slab in self._slabs.items():
+            a = jnp.asarray(tree[t]["A"], self.dtype)
+            b = jnp.asarray(tree[t]["B"], self.dtype)
+            m = jnp.asarray(tree[t]["mask"], self.dtype)
+            pad = self.r_slab - a.shape[-1]
+            if pad:
+                a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)))
+                b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+                m = jnp.pad(m, ((0, 0), (0, pad)))
+            slab["A"] = slab["A"].at[:, slot].set(a)
+            slab["B"] = slab["B"].at[:, slot].set(b)
+            slab["mask"] = slab["mask"].at[:, slot].set(m)
+        self.loads += 1
+
+    # -- views --------------------------------------------------------------
+
+    def has(self, adapter_id: str) -> bool:
+        return adapter_id in self._sources
+
+    def slabs(self) -> Dict[str, Dict[str, jax.Array]]:
+        """The current slab tree — pass straight into the decode step."""
+        return self._slabs
+
+    def slot_of(self, adapter_id: str) -> Optional[int]:
+        return self._lru.get(adapter_id)
+
+    def resident(self):
+        return list(self._lru)
+
+    def slot_tree(self, adapter_id: str) -> LoraTree:
+        """Read an adapter's slab slot back out (layer-major, slab rank) —
+        the checkpoint round-trip test compares this against the source."""
+        slot = self._lru[adapter_id]
+        return {t: {k: v[:, slot] for k, v in slab.items()}
+                for t, slab in self._slabs.items()}

@@ -1,0 +1,132 @@
+"""Checkpoint round-trips, and checkpoint -> serving-registry loading."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.configs import get_reduced
+from repro.serve import AdapterRegistry
+from repro.serve.oracle import make_demo_adapter
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _adapter(cfg, rank, seed):
+    return make_demo_adapter(jax.random.fold_in(KEY, seed), cfg, rank)
+
+
+def test_pytree_roundtrip_exact(tmp_path):
+    tree = {"w": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b16": jnp.linspace(-2, 2, 8,
+                                           dtype=jnp.bfloat16),
+                       "i": jnp.arange(5, dtype=jnp.int32)}}
+    p = str(tmp_path / "arrays.npz")
+    store.save_pytree(p, tree)
+    back = store.load_pytree(p)
+    for path in (("w",), ("nested", "b16"), ("nested", "i")):
+        a, b = tree, back
+        for k in path:
+            a, b = a[k], b[k]
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        assert np.array_equal(np.asarray(a), np.asarray(b)), path
+
+
+def test_save_restore_meta_and_latest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    store.save(d, 3, {"x": jnp.ones((2,))}, meta={"round": 3})
+    store.save(d, 7, {"x": jnp.full((2,), 2.0)}, meta={"round": 7})
+    assert store.latest_step(d) == 7
+    tree, meta = store.restore(d)
+    assert meta["round"] == 7
+    assert np.array_equal(np.asarray(tree["x"]), [2.0, 2.0])
+    tree3, meta3 = store.restore(d, step=3)
+    assert meta3["round"] == 3
+    assert np.array_equal(np.asarray(tree3["x"]), [1.0, 1.0])
+
+
+def test_heterogeneous_adapters_through_registry(tmp_path):
+    """fed/ -> checkpoint -> registry: save per-client heterogeneous-rank
+    adapters, reload through the serving registry, and require *exact*
+    factor/mask equality inside the slab slots (zero-padded to slab rank)."""
+    cfg = get_reduced("gemma-2b")
+    ranks = {"c0": 2, "c1": 5, "c2": 8}
+    trees = {aid: _adapter(cfg, r, i)
+             for i, (aid, r) in enumerate(ranks.items())}
+    reg = AdapterRegistry(cfg, capacity=len(ranks), r_slab=8)
+    for aid, tree in trees.items():
+        d = str(tmp_path / aid)
+        store.save(d, 0, tree, meta={"rank": ranks[aid]})
+        reg.register_checkpoint(aid, d)
+
+    for aid, tree in trees.items():
+        reg.acquire(aid)
+        got = reg.slot_tree(aid)
+        for t in tree:
+            r = tree[t]["A"].shape[-1]
+            a = np.asarray(got[t]["A"])
+            b = np.asarray(got[t]["B"])
+            m = np.asarray(got[t]["mask"])
+            assert np.array_equal(a[..., :r], np.asarray(tree[t]["A"]))
+            assert np.array_equal(b[:, :r, :], np.asarray(tree[t]["B"]))
+            assert np.array_equal(m[..., :r], np.asarray(tree[t]["mask"]))
+            # padding beyond the adapter's true rank is exactly zero
+            assert not a[..., r:].any()
+            assert not b[:, r:, :].any()
+            assert not m[..., r:].any()
+
+
+def test_registry_lru_eviction_and_reload(tmp_path):
+    cfg = get_reduced("gemma-2b")
+    trees = {f"c{i}": _adapter(cfg, 2 + i, 10 + i) for i in range(3)}
+    reg = AdapterRegistry(cfg, capacity=2)
+    for aid, tree in trees.items():
+        reg.register(aid, tree)
+
+    s0 = reg.acquire("c0")
+    reg.release("c0")
+    s1 = reg.acquire("c1")
+    reg.release("c1")
+    assert {s0, s1} == {0, 1}
+    # c0 is LRU -> admitting c2 evicts it
+    s2 = reg.acquire("c2")
+    reg.release("c2")
+    assert s2 == s0
+    assert reg.evictions == 1
+    assert reg.slot_of("c0") is None
+    # re-acquiring c0 reloads from source, evicting c1 (now LRU)
+    reg.acquire("c0")
+    got = reg.slot_tree("c0")
+    for t in trees["c0"]:
+        assert np.array_equal(np.asarray(got[t]["A"])[..., :2],
+                              np.asarray(trees["c0"][t]["A"])[..., :2])
+    assert reg.slot_of("c1") is None
+
+
+def test_registry_all_pinned_raises():
+    cfg = get_reduced("gemma-2b")
+    reg = AdapterRegistry(cfg, capacity=1)
+    reg.register("a", _adapter(cfg, 4, 1))
+    reg.register("b", _adapter(cfg, 4, 2))
+    reg.acquire("a")          # pinned
+    with pytest.raises(RuntimeError):
+        reg.acquire("b")
+    reg.release("a")
+    assert reg.acquire("b") == 0
+
+
+def test_registry_rejects_bad_shapes():
+    cfg = get_reduced("gemma-2b")
+    reg = AdapterRegistry(cfg, capacity=1, r_slab=8)
+    tree = _adapter(cfg, 4, 3)
+    bad = {t: dict(v) for t, v in tree.items()}
+    bad["q"] = {  # rank 16 > slab rank 8
+        "A": jnp.concatenate([tree["q"]["A"]] * 2, axis=-1),
+        "B": jnp.concatenate([tree["q"]["B"]] * 2, axis=1),
+        "mask": jnp.concatenate([tree["q"]["mask"]] * 2, axis=-1),
+    }
+    with pytest.raises(ValueError):
+        reg.register("too_big", bad)
+    with pytest.raises(ValueError):
+        reg.register("missing", {t: v for t, v in tree.items()
+                                 if t != "q"})
