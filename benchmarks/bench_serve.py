@@ -1,22 +1,31 @@
-"""Serving throughput: naive per-request loop vs batched multi-LoRA engine.
+"""Serving throughput: naive per-request loop vs batched multi-LoRA engine,
+plus the paged-KV / chunked-prefill economics (PR 3).
 
-Three ways to serve 8 requests spanning 4 heterogeneous-rank adapters at
-gemma-2b-reduced scale, greedy decode:
+Part 1 — three ways to serve 8 requests spanning 4 heterogeneous-rank
+adapters at gemma-2b-reduced scale, greedy decode:
 
   naive    — the seed example's loop: one request at a time, batch 1,
              adapter in factored form (serve/oracle.factored_greedy).
-  engine   — ``repro.serve.ServeEngine``: all requests continuous-batched
-             through one jitted step, per-row BGMV adapter gather.
+  engine   — ``repro.serve.ServeEngine`` (paged KV, chunked prefill):
+             all requests continuous-batched through one jitted step,
+             per-row BGMV adapter gather.
   merged   — per-request merged-weight decode (zero adapter overhead but
              one full weight copy per adapter — the S-LoRA trade the
              engine avoids).
 
+Part 2 — paged vs dense on ragged traffic (1 long + 7 short prompts at
+equal batch): the dense ring must size every row for the longest
+request, the page pool sizes to what traffic actually writes; emits KV
+bytes per admitted token for both, greedy-exactness vs the merged
+oracle, and the retrace counters across admissions + page extensions.
+
+Part 3 — prefill: chunked (one dispatch per ``prefill_chunk`` tokens,
+flash attention at q_offset) vs token-at-a-time teacher forcing on a
+long prompt. Acceptance: ≥ 3× prompt tokens/sec.
+
 Each path runs one warmup wave first so compile time is excluded from
 every side (steady-state throughput is the serving metric; a fleet
-compiles once and serves forever). Emits tokens/sec for each, the
-engine:naive speedup (acceptance: ≥ 2×), the exact-greedy-match
-fraction vs the merged oracle, and retrace counters before/after an
-adapter hot-swap (acceptance: flat).
+compiles once and serves forever).
 """
 from __future__ import annotations
 
@@ -36,28 +45,37 @@ NUM_REQ = 8
 RANKS = (2, 4, 6, 8)
 
 
-def run(quick=False):
-    steps = 8 if quick else 16
-    prompt_len = 8
+def _setup():
     cfg = get_reduced("gemma-2b")
     key = jax.random.PRNGKey(0)
     params = model_lib.init_params(key, cfg)
     adapters = {f"client{i}": make_demo_adapter(
                     jax.random.fold_in(key, 100 + i), cfg, r)
                 for i, r in enumerate(RANKS)}
+    return cfg, key, params, adapters
+
+
+def _registry(cfg, adapters):
     registry = AdapterRegistry(cfg, capacity=len(RANKS))
     for aid, tree in adapters.items():
         registry.register(aid, tree)
+    return registry
+
+
+def _throughput_wave(results, cfg, key, params, adapters, quick):
+    steps = 8 if quick else 16
+    prompt_len = 8
+    registry = _registry(cfg, adapters)
     prompts = np.asarray(jax.random.randint(
         jax.random.fold_in(key, 3), (NUM_REQ, prompt_len), 3,
         cfg.vocab_size))
     req_trees = [adapters[f"client{i % len(RANKS)}"]
                  for i in range(NUM_REQ)]
     total_tok = NUM_REQ * steps
-    results = {}
 
     engine = ServeEngine(params, cfg, registry, max_batch=NUM_REQ,
-                         max_seq=prompt_len + steps)
+                         max_seq=prompt_len + steps, page_size=8,
+                         prefill_chunk=prompt_len)
 
     def engine_wave():
         uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
@@ -123,6 +141,113 @@ def run(quick=False):
     emit("serve/summary", 0.0,
          f"speedup_vs_naive={results['speedup_vs_naive']:.2f}x "
          f"exact_match={match}/{NUM_REQ}")
+
+
+def _paged_vs_dense(results, cfg, key, params, adapters, quick):
+    """Ragged traffic at equal batch: 1 long + 7 short prompts. The dense
+    ring pays max_seq on every row; the pool pays for written tokens."""
+    ps = 8
+    long_len = 32 if quick else 64
+    short_len = 8 if quick else 16
+    steps = 4 if quick else 8
+    max_seq = long_len + steps
+    lens = [long_len] + [short_len] * (NUM_REQ - 1)
+    prompts = [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 40 + i), (lens[i],), 3, cfg.vocab_size))
+        for i in range(NUM_REQ)]
+    total_tok = sum(lens) + NUM_REQ * steps
+    # pool sized to traffic demand, not to worst case
+    num_pages = sum(-(-(li + steps) // ps) for li in lens)
+
+    outs = {}
+    for mode, kw in (("dense", {}),
+                     ("paged", {"page_size": ps, "num_pages": num_pages,
+                                "prefill_chunk": 16})):
+        engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                             max_batch=NUM_REQ, max_seq=max_seq,
+                             kv_mode=mode, **kw)
+
+        def wave():
+            uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
+                                  max_new_tokens=steps)
+                    for i in range(NUM_REQ)]
+            t0 = time.time()
+            done = engine.run()
+            return time.time() - t0, [done[u] for u in uids]
+
+        wave()                                   # warmup compile
+        traces_w1 = engine.trace_count
+        t, outs[mode] = wave()                   # steady state
+        results[f"{mode}_kv_bytes"] = engine.kv_cache_bytes()
+        results[f"{mode}_kv_bytes_per_token"] = \
+            engine.kv_cache_bytes() / total_tok
+        results[f"{mode}_ragged_tok_per_s"] = total_tok / t
+        if mode == "paged":
+            results["paged_traces_flat"] = \
+                int(engine.trace_count == traces_w1)
+            results["paged_deferrals"] = engine.deferrals
+            results["paged_preemptions"] = engine.preemptions
+            engine.kv.allocator.check()
+
+    merged = [merged_greedy(params, cfg, prompts[i],
+                            adapters[f"client{i % len(RANKS)}"], steps)
+              for i in range(NUM_REQ)]
+    for mode in ("dense", "paged"):
+        results[f"{mode}_ragged_exact"] = sum(
+            int((o == m).all()) for o, m in zip(outs[mode], merged)
+        ) / NUM_REQ
+    results["kv_memory_ratio_dense_over_paged"] = \
+        results["dense_kv_bytes"] / results["paged_kv_bytes"]
+    emit("serve/paged_vs_dense", 0.0,
+         f"kv_bytes/token dense={results['dense_kv_bytes_per_token']:.0f} "
+         f"paged={results['paged_kv_bytes_per_token']:.0f} "
+         f"({results['kv_memory_ratio_dense_over_paged']:.2f}x less), "
+         f"exact={results['paged_ragged_exact']:.2f}, "
+         f"traces_flat={results['paged_traces_flat']}")
+
+
+def _prefill(results, cfg, key, params, adapters, quick):
+    """Time-to-first-token on a long prompt: chunked prefill vs
+    token-at-a-time teacher forcing (the dense engine's only mode)."""
+    ps = 8
+    long_len = 32 if quick else 64
+    max_seq = long_len + 8
+    prompt = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 7), (long_len,), 3, cfg.vocab_size))
+    times = {}
+    for mode, kw in (("dense", {}),
+                     ("paged", {"page_size": ps, "prefill_chunk": 16})):
+        engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                             max_batch=1, max_seq=max_seq, kv_mode=mode,
+                             **kw)
+
+        def once():
+            uid = engine.submit(prompt, "client0", max_new_tokens=1)
+            t0 = time.time()
+            out = engine.run()
+            return time.time() - t0, out[uid]
+
+        once()                                   # warmup compile
+        reps = [once() for _ in range(3)]
+        times[mode] = min(t for t, _ in reps)
+        first = reps[0][1]
+    results["prefill_tat_tok_per_s"] = long_len / times["dense"]
+    results["prefill_chunked_tok_per_s"] = long_len / times["paged"]
+    results["prefill_speedup"] = times["dense"] / times["paged"]
+    want = merged_greedy(params, cfg, prompt, adapters["client0"], 1)
+    results["prefill_first_token_exact"] = int((first == want).all())
+    emit("serve/prefill", times["paged"] * 1e6 / long_len,
+         f"chunked {results['prefill_chunked_tok_per_s']:.0f} tok/s vs "
+         f"token-at-a-time {results['prefill_tat_tok_per_s']:.0f} tok/s "
+         f"({results['prefill_speedup']:.1f}x, expect >=3x)")
+
+
+def run(quick=False):
+    cfg, key, params, adapters = _setup()
+    results = {}
+    _throughput_wave(results, cfg, key, params, adapters, quick)
+    _paged_vs_dense(results, cfg, key, params, adapters, quick)
+    _prefill(results, cfg, key, params, adapters, quick)
     return results
 
 

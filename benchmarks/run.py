@@ -5,12 +5,18 @@
   server        bench_server      — aggregation strategy cost
   comm          bench_comm        — per-round communication volume (C4)
   svd           bench_svd         — SVD back-end scaling
-  serve         bench_serve       — multi-LoRA serving throughput
+  serve         bench_serve       — multi-LoRA serving throughput + paged KV
   roofline      bench_roofline    — 3-term roofline from the dry-run
 
 Output: CSV lines ``name,us_per_call,derived`` + markdown tables,
-merged into results/bench_results.json (sections not re-run this
-invocation keep their previous numbers).
+merged into results/bench_results.json.
+
+Merge semantics (hardened): each section runs isolated — one crashing
+section cannot take down the others, and a section that *failed* this
+invocation keeps its previous good numbers in the json instead of
+clobbering them (its error lands under ``"_errors"``). Sections not
+re-run this invocation keep their previous numbers. The json write is
+atomic (tmp + rename), so an interrupt never leaves a half-written file.
 
   PYTHONPATH=src python -m benchmarks.run [--only svd,comm] [--quick]
 """
@@ -21,6 +27,7 @@ import json
 import os
 import sys
 import time
+import traceback
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
@@ -31,55 +38,100 @@ from benchmarks import (bench_bias, bench_comm, bench_convergence,
 ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline")
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="all")
-    ap.add_argument("--quick", action="store_true")
-    ap.add_argument("--dryrun-jsonl", default="results/dryrun.jsonl")
-    ap.add_argument("--out", default="results/bench_results.json")
-    args = ap.parse_args()
-    which = ALL if args.only == "all" else tuple(args.only.split(","))
-    results = {}
-    t0 = time.time()
+def _run_roofline(args):
+    rows = bench_roofline.run(args.dryrun_jsonl, quick=args.quick)
+    print("\n## Roofline (single-pod 16x16)\n")
+    print(bench_roofline.markdown_table(rows, "16x16"))
+    print("\n## Collective bytes: paper-faithful baseline vs optimized"
+          " (§Perf)\n")
+    print(bench_roofline.compare())
+    return rows
 
-    print("name,us_per_call,derived")
-    if "comm" in which:
-        results["comm"] = bench_comm.run(quick=args.quick)
-    if "svd" in which:
-        results["svd"] = bench_svd.run(quick=args.quick)
-    if "server" in which:
-        results["server"] = bench_server.run(quick=args.quick)
-    if "serve" in which:
-        results["serve"] = bench_serve.run(quick=args.quick)
-    if "bias" in which:
-        results["bias"] = bench_bias.run(quick=args.quick)
-    if "roofline" in which:
-        rows = bench_roofline.run(args.dryrun_jsonl, quick=args.quick)
-        results["roofline"] = rows
-        print("\n## Roofline (single-pod 16x16)\n")
-        print(bench_roofline.markdown_table(rows, "16x16"))
-        print("\n## Collective bytes: paper-faithful baseline vs optimized"
-              " (§Perf)\n")
-        print(bench_roofline.compare())
-    if "convergence" in which:
-        conv = bench_convergence.run(quick=args.quick)
-        results["convergence"] = conv
-        print("\n## Table 1 reproduction (accuracy %, mean over seeds)\n")
-        print(bench_convergence.table1(conv))
 
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+def _run_convergence(args):
+    conv = bench_convergence.run(quick=args.quick)
+    print("\n## Table 1 reproduction (accuracy %, mean over seeds)\n")
+    print(bench_convergence.table1(conv))
+    return conv
+
+
+def _runners(args):
+    # declaration order == execution order (cheap sections first)
+    return {
+        "comm": lambda: bench_comm.run(quick=args.quick),
+        "svd": lambda: bench_svd.run(quick=args.quick),
+        "server": lambda: bench_server.run(quick=args.quick),
+        "serve": lambda: bench_serve.run(quick=args.quick),
+        "bias": lambda: bench_bias.run(quick=args.quick),
+        "roofline": lambda: _run_roofline(args),
+        "convergence": lambda: _run_convergence(args),
+    }
+
+
+def merge_results(path: str, results: dict, errors: dict) -> dict:
+    """Previous json + this run's sections; failed sections keep their
+    old numbers and record the failure under '_errors'. Atomic write."""
     merged = {}
-    if os.path.exists(args.out):  # keep sections not re-run this time
+    if os.path.exists(path):  # keep sections not re-run this time
         try:
-            with open(args.out) as f:
+            with open(path) as f:
                 merged = json.load(f)
         except (json.JSONDecodeError, OSError):
             pass  # corrupt/partial previous file: overwrite, don't crash
+    prev_errors = merged.pop("_errors", {})
     merged.update(results)
-    with open(args.out, "w") as f:
+    # a section that succeeded now clears its stale error; a section that
+    # failed now records one *without* touching its previous numbers
+    for name in results:
+        prev_errors.pop(name, None)
+    prev_errors.update(errors)
+    if prev_errors:
+        merged["_errors"] = prev_errors
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(merged, f, indent=1, default=float)
-    print(f"\n[benchmarks] done in {time.time() - t0:.1f}s -> {args.out}")
+    os.replace(tmp, path)
+    return merged
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help=f"comma-separated subset of {','.join(ALL)}")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--dryrun-jsonl", default="results/dryrun.jsonl")
+    ap.add_argument("--out", default="results/bench_results.json")
+    args = ap.parse_args(argv)
+    if args.only == "all":
+        which = ALL
+    else:
+        which = tuple(s for s in args.only.split(",") if s)
+        unknown = sorted(set(which) - set(ALL))
+        if unknown:
+            ap.error(f"unknown section(s) {unknown}; valid: {list(ALL)}")
+    runners = _runners(args)
+    results, errors = {}, {}
+    t0 = time.time()
+
+    print("name,us_per_call,derived")
+    for name, runner in runners.items():
+        if name not in which:
+            continue
+        try:
+            results[name] = runner()
+        except Exception as e:  # noqa: BLE001 — isolate section failures
+            traceback.print_exc()
+            errors[name] = f"{type(e).__name__}: {e}"
+            print(f"[benchmarks] section {name!r} FAILED — previous "
+                  f"numbers (if any) are kept")
+
+    merge_results(args.out, results, errors)
+    status = f"{len(results)}/{len(results) + len(errors)} sections ok"
+    print(f"\n[benchmarks] {status} in {time.time() - t0:.1f}s "
+          f"-> {args.out}")
+    return 1 if errors else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -30,6 +30,7 @@ silently wrong under ``split="sqrt"`` (row norms of B' are √σ there).
 from __future__ import annotations
 
 import math
+import time
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -43,6 +44,54 @@ StackedAdapter = Dict[str, jax.Array]
 
 def _prod(xs) -> int:
     return int(math.prod(xs)) if xs else 1
+
+
+# ---------------------------------------------------------------------------
+# recon_agg backend autotune (ROADMAP follow-up: pick use_pallas by a timed
+# probe, not a backend string check)
+# ---------------------------------------------------------------------------
+
+_AUTOTUNE_CACHE: Dict[tuple, bool] = {}
+# Off-TPU the Pallas kernel runs in interpret mode (a Python loop over
+# grid points); above this element count even the one-shot probe itself
+# is not worth running — the einsum always wins.
+_INTERPRET_PROBE_LIMIT = 1 << 16
+
+
+def _probe_recon_backend(kc: int, d_in: int, r: int, d_out: int,
+                         dtype) -> bool:
+    """One-shot timed autotune for the dense-reconstruction backend:
+    run the Pallas ``recon_agg`` and the einsum contraction once each
+    (after a compile/warmup call) on representative ones-filled inputs of
+    the true shape and keep the faster one. Cached per (shape, dtype)
+    for the life of the process."""
+    key = (kc, d_in, r, d_out, jnp.dtype(dtype).name)
+    hit = _AUTOTUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    from repro.kernels import ops, ref
+    if not ops.on_tpu() and kc * d_in * d_out > _INTERPRET_PROBE_LIMIT:
+        _AUTOTUNE_CACHE[key] = False
+        return False
+    a = jnp.ones((kc, d_in, r), dtype)
+    b = jnp.ones((kc, r, d_out), dtype)
+    eta = jnp.ones((kc,), jnp.float32)
+    ref_fn = jax.jit(ref.recon_agg_ref)
+
+    def timed(fn) -> float:
+        fn(a, b, eta).block_until_ready()      # compile + warm
+        t0 = time.perf_counter()
+        fn(a, b, eta).block_until_ready()
+        return time.perf_counter() - t0
+
+    try:
+        t_pallas = timed(lambda *xs: ops.recon_agg(*xs))
+    except Exception:                          # kernel unsupported here
+        _AUTOTUNE_CACHE[key] = False
+        return False
+    decision = t_pallas < timed(ref_fn)
+    _AUTOTUNE_CACHE[key] = decision
+    return decision
 
 
 # ---------------------------------------------------------------------------
@@ -139,10 +188,16 @@ class AggregationEngine:
     """Jit-cached batched tree aggregation.
 
     One engine instance holds one jit cache per static configuration
-    (strategy, method, split, masks-provided, pallas on/off); within a
-    configuration, jax.jit's structural cache keys on the adapter tree's
-    names/shapes/dtypes — so repeated rounds (sync) and repeated submits
-    (async) replay a compiled executable with zero Python-loop dispatch.
+    (strategy, method, split, masks-provided, per-shape backend map);
+    within a configuration, jax.jit's structural cache keys on the
+    adapter tree's names/shapes/dtypes — so repeated rounds (sync) and
+    repeated submits (async) replay a compiled executable with zero
+    Python-loop dispatch.
+
+    ``use_pallas=None`` (default) resolves the dense-reconstruction
+    backend by a one-shot *timed autotune probe* per (shape, dtype) —
+    not a backend string check — cached process-wide (see
+    ``_probe_recon_backend``). Pass True/False to force.
 
     Call returns ``(tree, spectra)`` where ``spectra[target]`` is the
     singular spectrum of that target's aggregated ΔW' with shape
@@ -177,13 +232,13 @@ class AggregationEngine:
     ) -> Tuple[Dict[str, StackedAdapter], Dict[str, jax.Array]]:
         if strategy not in ("naive", "hlora"):
             raise ValueError(f"unknown strategy {strategy!r}")
-        use_pallas = self._resolve_pallas()
-        cfg = (strategy, method, split, new_masks is not None, use_pallas,
+        pallas_map = self._resolve_pallas(adapters, strategy, method)
+        cfg = (strategy, method, split, new_masks is not None, pallas_map,
                self.factored_impl)
         fn = self._jitted.get(cfg)
         if fn is None:
             fn = jax.jit(partial(self._run, strategy=strategy, method=method,
-                                 split=split, use_pallas=use_pallas,
+                                 split=split, pallas_map=pallas_map,
                                  factored_impl=self.factored_impl))
             self._jitted[cfg] = fn
         if key is None:
@@ -191,20 +246,30 @@ class AggregationEngine:
         alpha_arr = jnp.asarray(alpha, jnp.float32)
         return fn(adapters, new_masks, jnp.asarray(eta), alpha_arr, key)
 
-    def _resolve_pallas(self) -> bool:
-        if self.use_pallas is None:
-            from repro.kernels import ops
-            return ops.on_tpu()
-        return bool(self.use_pallas)
+    def _resolve_pallas(self, adapters, strategy: str, method: str) -> tuple:
+        """Per-recon-shape backend decisions as a static, hashable map
+        ``((k, d_in, r, d_out) -> bool, ...)``. Explicit ``use_pallas``
+        wins; otherwise each distinct shape gets a one-shot timed probe
+        (only the dense-reconstruction methods ever run the kernel)."""
+        sigs = {}
+        for ad in adapters.values():
+            sigs[(ad["A"].shape[0], ad["A"].shape[-2],
+                  ad["A"].shape[-1], ad["B"].shape[-1])] = ad["A"].dtype
+        sigs = dict(sorted(sigs.items()))
+        if self.use_pallas is not None:
+            return tuple((s, bool(self.use_pallas)) for s in sigs)
+        if strategy != "hlora" or method not in ("exact", "randomized"):
+            return tuple((s, False) for s in sigs)  # kernel never runs
+        return tuple((s, _probe_recon_backend(*s, dt))
+                     for s, dt in sigs.items())
 
     # -- traced body --------------------------------------------------------
 
     def _run(self, adapters, new_masks, eta, alpha, key, *,
-             strategy, method, split, use_pallas, factored_impl):
+             strategy, method, split, pallas_map, factored_impl):
         self.trace_count += 1   # side effect fires only while tracing
-        item = _naive_item if strategy == "naive" else _hlora_item
-        item = partial(item, method=method, split=split,
-                       use_pallas=use_pallas, factored_impl=factored_impl)
+        base_item = _naive_item if strategy == "naive" else _hlora_item
+        backend = dict(pallas_map)
 
         groups: Dict[tuple, list] = {}
         for name in sorted(adapters):
@@ -216,6 +281,12 @@ class AggregationEngine:
         out: Dict[str, StackedAdapter] = {}
         spectra: Dict[str, jax.Array] = {}
         for sig, members in sorted(groups.items()):
+            a_shape, b_shape = sig[0], sig[1]
+            use_pallas = backend[(a_shape[0], a_shape[-2], a_shape[-1],
+                                  b_shape[-1])]
+            item = partial(base_item, method=method, split=split,
+                           use_pallas=use_pallas,
+                           factored_impl=factored_impl)
             self._run_group(adapters, new_masks, eta, alpha, key, members,
                             item, out, spectra)
         return out, spectra

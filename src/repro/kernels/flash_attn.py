@@ -4,8 +4,13 @@ One (head, q-block) program scans KV blocks sequentially (innermost grid
 axis), carrying the online-softmax state (running max m, normalizer l,
 f32 accumulator) in VMEM scratch. Masks are computed from absolute
 positions, so the same kernel serves full-causal and sliding-window
-attention (the hymba/long-context path). q may be a suffix of kv
-(q_offset = Skv − Sq), which is what decode/chunked-prefill need.
+attention (the hymba/long-context path). q may sit at any absolute
+offset into the kv sequence: by default q is the suffix
+(q_offset = Skv − Sq, the decode contract), but chunked prefill passes
+an explicit dynamic offset — it rides in scalar-prefetch SMEM, so every
+chunk of a prompt replays one compiled kernel instead of retracing per
+offset. KV beyond the chunk's last position (stale pool slots) is
+excluded by the same causal mask.
 
 Block shapes: (bq, d) q tile + (bk, d) kv tiles + (bq, bk) logits in VMEM.
 Defaults bq = bk = 256 with d ≤ 256 stay well inside 16 MB VMEM.
@@ -25,8 +30,8 @@ from repro.kernels.compat import CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, causal: bool, window, q_offset: int,
+def _kernel(qoff_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window,
             kv_steps: int, block_q: int, block_k: int):
     kb = pl.program_id(2)
 
@@ -41,7 +46,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
 
     qpos = (pl.program_id(1) * block_q + jax.lax.iota(jnp.int32, block_q)
-            + q_offset)[:, None]
+            + qoff_ref[0])[:, None]
     kpos = (kb * block_k + jax.lax.iota(jnp.int32, block_k))[None, :]
     mask = jnp.ones(s.shape, jnp.bool_)
     if causal:
@@ -68,38 +73,50 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "block_q", "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
-                    block_q: int = 256, block_k: int = 256,
+                    q_offset=None, block_q: int = 256, block_k: int = 256,
                     interpret: bool = False):
-    """q: (Sq, H, D), k/v: (Skv, H, D) -> (Sq, H, D). Batch via vmap."""
+    """q: (Sq, H, D), k/v: (Skv, H, D) -> (Sq, H, D). Batch via vmap.
+
+    ``q_offset``: absolute position of q[0] in the kv sequence. None
+    (default) means q is the kv suffix (Skv − Sq). A traced scalar is
+    fine — it is delivered via scalar prefetch, not baked into the
+    trace, so varying offsets share one compilation."""
     sq, h, d = q.shape
     skv = k.shape[0]
     bq, bk = min(block_q, sq), min(block_k, skv)
     assert sq % bq == 0 and skv % bk == 0
-    q_offset = skv - sq
+    if q_offset is None:
+        q_offset = skv - sq
+    qoff = jnp.asarray(q_offset, jnp.int32).reshape(1)
     scale = 1.0 / math.sqrt(d)
     grid = (h, sq // bq, skv // bk)
     qt = jnp.swapaxes(q, 0, 1)   # (H, Sq, D)
     kt = jnp.swapaxes(k, 0, 1)
     vt = jnp.swapaxes(v, 0, 1)
-    out = pl.pallas_call(
-        functools.partial(
-            _kernel, scale=scale, causal=causal, window=window,
-            q_offset=q_offset, kv_steps=skv // bk, block_q=bq, block_k=bk),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, bq, d), lambda hh, qb, kb: (hh, qb, 0)),
-            pl.BlockSpec((1, bk, d), lambda hh, qb, kb: (hh, kb, 0)),
-            pl.BlockSpec((1, bk, d), lambda hh, qb, kb: (hh, kb, 0)),
+            pl.BlockSpec((1, bq, d), lambda hh, qb, kb, qoff: (hh, qb, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qb, kb, qoff: (hh, kb, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qb, kb, qoff: (hh, kb, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda hh, qb, kb: (hh, qb, 0)),
-        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
+        out_specs=pl.BlockSpec((1, bq, d),
+                               lambda hh, qb, kb, qoff: (hh, qb, 0)),
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
+    )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, window=window,
+            kv_steps=skv // bk, block_q=bq, block_k=bk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((h, sq, d), q.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(qt, kt, vt)
+    )(qoff, qt, kt, vt)
     return jnp.swapaxes(out, 0, 1)

@@ -11,6 +11,7 @@ from repro.kernels import ref
 from repro.kernels.bgmv import bgmv as _bgmv
 from repro.kernels.flash_attn import flash_attention as _flash
 from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
+from repro.kernels.paged_attn import paged_attention as _paged_attn
 from repro.kernels.recon_agg import recon_agg as _recon_agg
 
 _ON_TPU = None
@@ -125,10 +126,47 @@ def bgmv(x, a, b, idx, *, interpret: Optional[bool] = None,
     return y[:, :d_out] if op != d_out else y
 
 
-def flash_attention(q, k, v, *, causal=True, window=None,
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=None,
                     interpret: Optional[bool] = None, **blocks):
-    """Batched flash attention: q (B,Sq,H,D), k/v (B,Skv,H,D)."""
+    """Batched flash attention: q (B,Sq,H,D), k/v (B,Skv,H,D).
+
+    ``q_offset`` (shared across the batch) places q[0] at an arbitrary
+    absolute kv position — the chunked-prefill contract; a traced scalar
+    does not retrace (scalar prefetch)."""
     interpret = (not on_tpu()) if interpret is None else interpret
     fn = lambda q_, k_, v_: _flash(q_, k_, v_, causal=causal, window=window,
-                                   interpret=interpret, **blocks)
+                                   q_offset=q_offset, interpret=interpret,
+                                   **blocks)
     return jax.vmap(fn)(q, k, v)
+
+
+def paged_attention(q, k_pool, v_pool, page_tables, lengths, *,
+                    page_size: int, interpret: Optional[bool] = None):
+    """Paged-attention decode: q (B, H, Dh) one token per row against the
+    page-pooled KV (NP, page_size, Hkv, Dh) named by page_tables (B, P).
+
+    Pads Dh up to the lane width and the slot axis up to the sublane
+    width (zero columns contribute nothing; padding slots are masked by
+    the kernel's logical ``page_size``), groups q heads by KV head, and
+    slices the result back. Positions >= lengths[b] are masked — see
+    kernels/paged_attn.py for the page-table contract."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    b, h, dh = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    groups = h // hkv
+    assert groups * hkv == h, (h, hkv)
+    scale = 1.0 / (dh ** 0.5)
+    dhp = _ceil_to(dh, 128)
+    psp = _ceil_to(ps, 8)
+    qg = q.reshape(b, hkv, groups, dh)
+    if dhp != dh:
+        qg = _pad_axis(qg, 3, dhp)
+        k_pool = _pad_axis(k_pool, 3, dhp)
+        v_pool = _pad_axis(v_pool, 3, dhp)
+    if psp != ps:
+        k_pool = _pad_axis(k_pool, 1, psp)
+        v_pool = _pad_axis(v_pool, 1, psp)
+    out = _paged_attn(qg, k_pool, v_pool, page_tables, lengths,
+                      page_size=page_size, scale=scale, interpret=interpret)
+    out = out.reshape(b, h, dhp)
+    return out[..., :dh] if dhp != dh else out

@@ -29,6 +29,43 @@ def bgmv_ref(x: jax.Array, a: jax.Array, b: jax.Array, idx: jax.Array
     return jnp.einsum("br,bro->bo", xa, b[idx])
 
 
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_tables: jax.Array, lengths: jax.Array
+                        ) -> jax.Array:
+    """Gather-based paged-attention decode oracle (and the off-TPU path).
+
+    q: (B, H, Dh) one decode token per row; k_pool/v_pool:
+    (num_pages, page_size, Hkv, Dh); page_tables: (B, P) int32 naming the
+    pages that hold row b's positions [j*ps, (j+1)*ps); lengths: (B,)
+    valid-token counts. Positions are implicit (slot s of table entry j is
+    position j*ps + s) — everything at positions >= lengths[b] is masked.
+    Returns (B, H, Dh)."""
+    b, h, dh = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    p = page_tables.shape[1]
+    kk = k_pool[page_tables].reshape(b, p * ps, hkv, dh)
+    vv = v_pool[page_tables].reshape(b, p * ps, hkv, dh)
+    groups = h // hkv
+    if groups > 1:
+        kk = jnp.broadcast_to(kk[:, :, :, None, :],
+                              (b, p * ps, hkv, groups, dh)
+                              ).reshape(b, p * ps, h, dh)
+        vv = jnp.broadcast_to(vv[:, :, :, None, :],
+                              (b, p * ps, hkv, groups, dh)
+                              ).reshape(b, p * ps, h, dh)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    valid = jnp.arange(p * ps)[None, :] < lengths[:, None]
+    logits = jnp.where(valid[:, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vv.astype(jnp.float32))
+    # empty rows emit exact zeros (matching the kernel), not the
+    # implementation-defined uniform mix of a fully-masked softmax
+    out = out * (lengths > 0)[:, None, None]
+    return out.astype(q.dtype)
+
+
 def flash_attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     window: Optional[int] = None,

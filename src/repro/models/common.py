@@ -149,6 +149,22 @@ def init_kv_cache(
     }
 
 
+def init_paged_kv_pool(
+    num_layers: int, num_pages: int, page_size: int, kv_heads: int,
+    head_dim: int, dtype=jnp.bfloat16,
+) -> Dict[str, jax.Array]:
+    """Global paged KV pool shared by every request row (serve/pages.py).
+
+    One extra page beyond ``num_pages`` is the *trash page*: fixed-shape
+    jitted steps steer writes for padded/inactive tokens there instead of
+    branching, so no live page is ever corrupted. Unlike the dense ring
+    cache there is no ``pos`` array — a slot's absolute position is
+    implicit in the page table (slot s of a row's j-th page is position
+    j * page_size + s), and validity is a per-row length scalar."""
+    shape = (num_layers, num_pages + 1, page_size, kv_heads, head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
 def cache_insert(layer_cache: Dict[str, jax.Array], k_new: jax.Array,
                  v_new: jax.Array, pos: jax.Array) -> Dict[str, jax.Array]:
     """Insert one token (B, 1, Hkv, Dh) at absolute position ``pos`` (scalar).

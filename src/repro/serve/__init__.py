@@ -10,11 +10,16 @@ path, in three layers:
                 slots with LRU eviction and retrace-free hot-swap.
   engine.py   — ServeEngine: continuous-batching greedy decoder; one
                 jitted step where every request row gathers its own
-                adapter out of the slabs (BGMV).
+                adapter out of the slabs (BGMV), its KV out of the page
+                pool (paged attention), and prompts prefill in chunks.
+  pages.py    — PagedKV + PageAllocator: the global page pool, host
+                free-list, and fixed-shape page tables that let free
+                pages — not max_seq — gate admission.
   oracle.py   — reference per-request decodes (factored + merged-weight)
                 the engine is pinned against, plus the shared demo-
                 adapter fixture.
-  kernels/bgmv.py — the Pallas TPU gather kernel behind that step.
+  kernels/bgmv.py       — the Pallas TPU adapter-gather kernel.
+  kernels/paged_attn.py — the Pallas TPU paged-attention decode kernel.
 
 Slab / mask layout
 ------------------
@@ -35,6 +40,7 @@ cohort masks).  Admitting, evicting, or hot-swapping an adapter is a
 step never retraces.
 """
 from repro.serve.engine import ServeEngine
+from repro.serve.pages import PageAllocator, PagedKV
 from repro.serve.registry import AdapterRegistry
 
-__all__ = ["AdapterRegistry", "ServeEngine"]
+__all__ = ["AdapterRegistry", "PageAllocator", "PagedKV", "ServeEngine"]

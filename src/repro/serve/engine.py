@@ -1,4 +1,5 @@
-"""Multi-tenant serving engine: continuous batching over per-request LoRA.
+"""Multi-tenant serving engine: continuous batching over per-request LoRA,
+with a paged KV cache and chunked prefill.
 
 One jitted decode step serves the whole batch. Each of the ``max_batch``
 request rows carries its own adapter-slot index into the registry slabs;
@@ -7,15 +8,34 @@ inside every layer the LoRA path is the BGMV gather
     y[i] = x[i] @ W0 + scale[idx[i]] · (x[i] @ A[idx[i]]) @ B[idx[i]]
 
 (Pallas ``kernels/bgmv.py`` on TPU, the gather-einsum oracle elsewhere).
-Prefill and decode share the step: prompts are teacher-forced token by
-token, so a row mid-prefill and a row deep into generation coexist in
-one batch — per-row absolute positions drive RoPE and per-row KV-cache
-slot insertion, and attention masks on cached validity rather than a
-shared scalar position.  Finished rows are recycled immediately
-(continuous batching): the scheduler resets that row's cache validity,
-pulls the next queued request, and pins its adapter via the registry —
-all value updates against fixed shapes, so ``trace_count`` stays flat
-across admissions, evictions, and hot-swaps.
+
+KV state is **paged** by default (``serve/pages.py``): rows own page
+lists in a global pool instead of dense ``(max_seq, Hkv, Dh)`` strips,
+so admission is gated by *free pages* — what traffic actually uses —
+rather than by the worst-case ``max_seq``. The scheduler defers
+admission while the pool is dry, extends a row's page list as its decode
+crosses page boundaries, and preempts the youngest rows (their requests
+re-queue and replay — greedy decode is deterministic) when an extension
+cannot be satisfied. Decode attention reads pages through the table
+(Pallas ``kernels/paged_attn.py`` on TPU, a gather + masked softmax
+elsewhere).
+
+Prefill is **chunked**: a second jitted step pushes ``prefill_chunk``
+prompt tokens at a time through full attention at absolute offset
+``q_offset = pos0`` (``kernels/flash_attn.py`` carries the offset in
+scalar-prefetch SMEM on TPU), writing K/V straight into the row's pages
+— versus the seed's token-at-a-time teacher forcing, one device dispatch
+per prompt *chunk* instead of per prompt token. Padded chunk tail tokens
+write to the pool's trash page.
+
+Everything is value updates against fixed shapes — page tables, page
+extensions, admissions, hot-swaps — so ``trace_count`` stays flat at
+one trace per jitted step (decode + prefill) for the engine's lifetime.
+
+``kv_mode="dense"`` keeps the PR-2 dense ring cache as a fallback; its
+insert path *drops* writes past the ring instead of silently wrapping
+(which corrupted attention for any row outliving its ring), and the
+scheduler raises before that can happen.
 """
 from __future__ import annotations
 
@@ -29,47 +49,59 @@ import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.models.common import (_act, attention, init_kv_cache, rope,
-                                 sinusoidal_positions)
+from repro.models.common import (_act, _repeat_kv, attention, init_kv_cache,
+                                 rope, sinusoidal_positions)
 from repro.models.transformer import norm
+from repro.serve.pages import PagedKV
 
 
 def _apply_slab_lora(x, w0, slab, idx, alpha, use_pallas: bool):
-    """x: (B, 1, d_in) -> x @ W0 + per-row gathered LoRA delta."""
+    """x: (B, S, d_in) -> x @ W0 + per-row gathered LoRA delta.
+
+    S == 1 (decode) rides the BGMV kernel on TPU; S > 1 (chunked prefill,
+    batch 1 there) uses the gather-einsum — one adapter gather for the
+    whole chunk."""
     y = x @ w0
     if slab is None:
         return y
     a, b, m = slab["A"], slab["B"], slab["mask"]     # (S,d,r) (S,r,o) (S,r)
     am = a * m[:, None, :]                            # dead directions -> 0
     scale = alpha / jnp.maximum(jnp.sum(m, axis=-1), 1.0)          # (S,)
-    xr = x[:, 0, :]
-    if use_pallas:
+    if use_pallas and x.shape[1] == 1:
         from repro.kernels import ops
-        lo = ops.bgmv(xr, am, b, idx)
+        lo = ops.bgmv(x[:, 0, :], am, b, idx)[:, None, :]
     else:
-        lo = jnp.einsum("br,bro->bo", jnp.einsum("bd,bdr->br", xr, am[idx]),
-                        b[idx])
-    return y + (scale[idx][:, None] * lo)[:, None, :].astype(y.dtype)
+        lo = jnp.einsum("bsr,bro->bso",
+                        jnp.einsum("bsd,bdr->bsr", x, am[idx]), b[idx])
+    return y + (scale[idx][:, None, None] * lo).astype(y.dtype)
 
 
 def _cache_insert_rows(lc, k_new, v_new, pos):
-    """Per-row insert: row i's token goes to slot pos[i] % slots.
-    k_new/v_new: (B, 1, Hkv, Dh), pos: (B,) absolute positions."""
-    slots = lc["k"].shape[1]
+    """Per-row dense-ring insert: row i's token goes to slot pos[i].
+
+    Positions at or past the ring (pos >= slots) are **dropped**, not
+    wrapped: wrapping overwrote the row's oldest live entries while the
+    validity mask still reported them current — silently corrupted
+    attention for any row that outlived its ring. The host scheduler
+    raises before this can happen (see ``step_batch``); ``mode='drop'``
+    makes the traced path fail safe rather than fail wrong."""
     rows = jnp.arange(pos.shape[0])
-    slot = pos % slots
     return {
-        "k": lc["k"].at[rows, slot].set(k_new[:, 0]),
-        "v": lc["v"].at[rows, slot].set(v_new[:, 0]),
-        "pos": lc["pos"].at[rows, slot].set(pos),
+        "k": lc["k"].at[rows, pos].set(k_new[:, 0], mode="drop"),
+        "v": lc["v"].at[rows, pos].set(v_new[:, 0], mode="drop"),
+        "pos": lc["pos"].at[rows, pos].set(pos, mode="drop"),
     }
 
 
-def _layer_decode(x, lp, slab, lc, idx, pos, cfg: ModelConfig,
-                  use_pallas: bool):
-    """One token through one layer, per-row adapters and positions."""
+# ---------------------------------------------------------------------------
+# Shared per-layer blocks (decode and prefill differ only in KV handling)
+# ---------------------------------------------------------------------------
+
+def _layer_qkv(x, lp, slab, idx, pos, cfg: ModelConfig, use_pallas):
+    """norm -> q/k/v projections with per-row LoRA -> heads + RoPE.
+    x: (B, S, d), pos: (B, S) absolute positions."""
     alpha = cfg.lora.alpha
-    bsz = x.shape[0]
+    bsz, s, _ = x.shape
     hd = cfg.resolved_head_dim
     ap = lp["attn"]
     h = norm(x, lp["ln1"])
@@ -79,20 +111,19 @@ def _layer_decode(x, lp, slab, lc, idx, pos, cfg: ModelConfig,
     if cfg.use_bias:
         q, k, v = q + ap.get("bq", 0.0), k + ap.get("bk", 0.0), \
             v + ap.get("bv", 0.0)
-    q = q.reshape(bsz, 1, cfg.num_heads, hd)
-    k = k.reshape(bsz, 1, cfg.num_kv_heads, hd)
-    v = v.reshape(bsz, 1, cfg.num_kv_heads, hd)
+    q = q.reshape(bsz, s, cfg.num_heads, hd)
+    k = k.reshape(bsz, s, cfg.num_kv_heads, hd)
+    v = v.reshape(bsz, s, cfg.num_kv_heads, hd)
     if cfg.rope_theta > 0:
-        q = rope(q, pos[:, None], cfg.rope_theta)
-        k = rope(k, pos[:, None], cfg.rope_theta)
-    lc = _cache_insert_rows(lc, k, v, pos)
-    # Validity-masked attention: each row sees exactly its own cached
-    # prefix (stale slots are pos=-1, recycled rows were reset) — the
-    # causal structure is in the mask, not a shared scalar position.
-    valid = (lc["pos"] >= 0) & (lc["pos"] <= pos[:, None])
-    o = attention(q, lc["k"], lc["v"], causal=False, window=None,
-                  kv_positions=lc["pos"], kv_valid=valid)
-    o = o.reshape(bsz, 1, cfg.num_heads * hd)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    return h, q, k, v
+
+
+def _layer_out(x, o, lp, slab, idx, cfg: ModelConfig, use_pallas):
+    """Attention output projection + residual + LoRA'd MLP block."""
+    alpha = cfg.lora.alpha
+    ap = lp["attn"]
     y = _apply_slab_lora(o, ap["wo"], slab.get("o"), idx, alpha, use_pallas)
     if cfg.use_bias and "bo" in ap:
         y = y + ap["bo"]
@@ -110,20 +141,119 @@ def _layer_decode(x, lp, slab, lc, idx, pos, cfg: ModelConfig,
     y = _apply_slab_lora(u, mp["w2"], slab.get("w2"), idx, alpha, use_pallas)
     if cfg.use_bias and "b2" in mp:
         y = y + mp["b2"]
-    return x + y, lc
+    return x + y
+
+
+def _layer_decode_dense(x, lp, slab, lc, idx, pos, cfg: ModelConfig,
+                        use_pallas: bool):
+    """One token through one layer against the dense ring cache."""
+    bsz = x.shape[0]
+    hd = cfg.resolved_head_dim
+    _, q, k, v = _layer_qkv(x, lp, slab, idx, pos[:, None], cfg, use_pallas)
+    lc = _cache_insert_rows(lc, k, v, pos)
+    # Validity-masked attention: each row sees exactly its own cached
+    # prefix (stale slots are pos=-1, recycled rows were reset) — the
+    # causal structure is in the mask, not a shared scalar position.
+    valid = (lc["pos"] >= 0) & (lc["pos"] <= pos[:, None])
+    o = attention(q, lc["k"], lc["v"], causal=False, window=None,
+                  kv_positions=lc["pos"], kv_valid=valid)
+    o = o.reshape(bsz, 1, cfg.num_heads * hd)
+    return _layer_out(x, o, lp, slab, idx, cfg, use_pallas), lc
+
+
+def _layer_decode_paged(x, lp, slab, lc, idx, pos, lens, page, slot,
+                        tables, cfg: ModelConfig, use_pallas: bool,
+                        page_size: int):
+    """One token through one layer against the paged pool.
+    page/slot: (B,) precomputed write targets (trash for inactive rows);
+    tables: (B, P) page tables; lens: (B,) valid tokens incl. this one."""
+    bsz = x.shape[0]
+    hd = cfg.resolved_head_dim
+    _, q, k, v = _layer_qkv(x, lp, slab, idx, pos[:, None], cfg, use_pallas)
+    lck = lc["k"].at[page, slot].set(k[:, 0])
+    lcv = lc["v"].at[page, slot].set(v[:, 0])
+    if use_pallas:
+        from repro.kernels import ops
+        o = ops.paged_attention(q[:, 0], lck, lcv, tables, lens,
+                                page_size=page_size)[:, None]
+    else:
+        p = tables.shape[1]
+        kk = lck[tables].reshape(bsz, p * page_size, cfg.num_kv_heads, hd)
+        vv = lcv[tables].reshape(bsz, p * page_size, cfg.num_kv_heads, hd)
+        # Positions are implicit in the page-table contract: slot s of
+        # table entry j is position j*ps + s. Valid = written for *this*
+        # row: stale slots and trash-mapped entries sit at >= lens.
+        kv_pos = jnp.broadcast_to(jnp.arange(p * page_size)[None, :],
+                                  (bsz, p * page_size))
+        o = attention(q, kk, vv, causal=False, window=None,
+                      kv_positions=kv_pos,
+                      kv_valid=kv_pos < lens[:, None])
+    o = o.reshape(bsz, 1, cfg.num_heads * hd)
+    return _layer_out(x, o, lp, slab, idx, cfg, use_pallas), {"k": lck,
+                                                              "v": lcv}
+
+
+def _layer_prefill_paged(x, lp, slab, lc, idx, tpos, page, slot, table_row,
+                         pos0, cfg: ModelConfig, use_pallas: bool,
+                         page_size: int):
+    """A chunk of one row's prompt through one layer. x: (1, C, d);
+    tpos: (1, C) absolute positions; page/slot: (C,) write targets
+    (padded tail tokens -> trash page); table_row: (1, P)."""
+    c = x.shape[1]
+    hd = cfg.resolved_head_dim
+    _, q, k, v = _layer_qkv(x, lp, slab, idx, tpos, cfg, use_pallas)
+    lck = lc["k"].at[page, slot].set(k[0])
+    lcv = lc["v"].at[page, slot].set(v[0])
+    p = table_row.shape[1]
+    kk = lck[table_row].reshape(1, p * page_size, cfg.num_kv_heads, hd)
+    vv = lcv[table_row].reshape(1, p * page_size, cfg.num_kv_heads, hd)
+    if use_pallas:
+        from repro.kernels import ops
+        groups = cfg.num_heads // cfg.num_kv_heads
+        kk = _repeat_kv(kk, groups)
+        vv = _repeat_kv(vv, groups)
+        # flash blocks must tile Sq/Skv exactly; page-pool capacities are
+        # not always multiples of 256 (e.g. 33 pages x 8 slots)
+        skv = p * page_size
+        bq = max(d for d in range(1, min(256, c) + 1) if c % d == 0)
+        bk = max(d for d in range(1, min(256, skv) + 1) if skv % d == 0)
+        o = ops.flash_attention(q, kk, vv, causal=True, q_offset=pos0,
+                                block_q=bq, block_k=bk)
+    else:
+        # Causal at absolute offset: stale/trash slots all sit at
+        # positions > the chunk's last valid q position, so the causal
+        # mask alone excludes them.
+        kv_pos = jnp.arange(p * page_size)[None, :]
+        o = attention(q, kk, vv, causal=True, window=None, q_offset=pos0,
+                      kv_positions=kv_pos)
+    o = o.reshape(1, c, cfg.num_heads * hd)
+    return _layer_out(x, o, lp, slab, idx, cfg, use_pallas), {"k": lck,
+                                                              "v": lcv}
 
 
 class ServeEngine:
-    """Continuous-batching multi-LoRA greedy decoder.
+    """Continuous-batching multi-LoRA greedy decoder over a paged KV cache.
 
-    ``max_batch`` request rows share one jitted step whose cache keys on
-    (batch, seq, slab, param) shapes only — request churn never
-    recompiles. Greedy sampling; the scheduler is host-side (admission,
-    token routing, finish/recycle), everything per-token is on device.
+    ``max_batch`` request rows share one jitted decode step (and one
+    jitted prefill step) whose caches key on (batch, page, slab, param)
+    shapes only — request churn, page churn, and adapter hot-swaps never
+    recompile. Greedy sampling; the scheduler is host-side (admission,
+    paging, preemption, token routing, finish/recycle), everything
+    per-token is on device.
+
+    kv_mode="paged" (default): a global page pool; per-request capacity
+    is ``ceil((prompt + max_new) / page_size)`` pages, admission waits
+    for free pages, decode extends page lists in place, and prompt
+    prefill runs ``prefill_chunk`` tokens per dispatch.
+    kv_mode="dense": the PR-2 per-row ring cache (one ``max_seq`` strip
+    per row, token-at-a-time prefill) — the memory/latency baseline.
     """
 
     def __init__(self, params, cfg: ModelConfig, registry, *,
                  max_batch: int = 8, max_seq: int = 128,
+                 kv_mode: str = "paged", page_size: int = 8,
+                 num_pages: Optional[int] = None,
+                 prefill_chunk: int = 16,
                  use_pallas: Optional[bool] = None,
                  cache_dtype=jnp.float32):
         if cfg.arch_type not in ("dense", "vlm"):
@@ -132,53 +262,146 @@ class ServeEngine:
                 f"{cfg.arch_type!r}")
         if cfg.num_experts:
             raise NotImplementedError("MoE serving not wired yet")
+        if kv_mode not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_mode {kv_mode!r}")
         self.params = params
         self.cfg = cfg
         self.registry = registry
         self.max_batch = int(max_batch)
         self.max_seq = int(max_seq)
+        self.kv_mode = kv_mode
         if use_pallas is None:
             from repro.kernels import ops
             use_pallas = ops.on_tpu()
         self.use_pallas = bool(use_pallas)
-        self.cache = init_kv_cache(cfg.num_layers, self.max_batch,
-                                   self.max_seq, cfg.num_kv_heads,
-                                   cfg.resolved_head_dim, dtype=cache_dtype)
         self.trace_count = 0
-        self._step = jax.jit(self._step_impl)
-        self._reset = jax.jit(self._reset_impl)
+        if kv_mode == "paged":
+            self.page_size = int(page_size)
+            pages_per_row = -(-self.max_seq // self.page_size)
+            if num_pages is None:
+                # Same worst-case capacity as the dense cache; the win
+                # comes from sizing num_pages to *traffic* instead.
+                num_pages = self.max_batch * pages_per_row
+            self.kv = PagedKV(cfg.num_layers, int(num_pages),
+                              self.page_size, pages_per_row,
+                              self.max_batch, cfg.num_kv_heads,
+                              cfg.resolved_head_dim, dtype=cache_dtype)
+            self.prefill_chunk = max(1, int(prefill_chunk))
+            self._step = jax.jit(self._paged_step_impl)
+            self._prefill = jax.jit(self._prefill_impl)
+        else:
+            self.cache = init_kv_cache(cfg.num_layers, self.max_batch,
+                                       self.max_seq, cfg.num_kv_heads,
+                                       cfg.resolved_head_dim,
+                                       dtype=cache_dtype)
+            self._step = jax.jit(self._dense_step_impl)
+            self._reset = jax.jit(self._reset_impl)
         self._queue: deque = deque()
         self._rows: List[Optional[dict]] = [None] * self.max_batch
         self._done: Dict[str, np.ndarray] = {}
         self._uid = 0
         self.steps = 0
         self.tokens_generated = 0
+        self.prefill_calls = 0
+        self.prefill_tokens = 0
+        self.deferrals = 0
+        self.preemptions = 0
+
+    # -- introspection ------------------------------------------------------
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes held by the KV state (pool or dense cache)."""
+        if self.kv_mode == "paged":
+            return self.kv.nbytes()
+        return sum(int(x.nbytes) for x in jax.tree.leaves(self.cache))
+
+    def row_capacity(self) -> int:
+        """Max tokens (prompt + generation) one request may ever hold."""
+        if self.kv_mode == "paged":
+            return self.kv.row_capacity()
+        return self.max_seq
 
     # -- jitted bodies ------------------------------------------------------
 
-    def _step_impl(self, params, slabs, cache, idx, tokens, pos):
+    def _embed(self, params, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)          # (B,S,d)
+        if cfg.rope_theta == 0:
+            x = x * math.sqrt(cfg.d_model) + sinusoidal_positions(
+                pos, cfg.d_model).astype(x.dtype)
+        return x
+
+    def _logits(self, params, x):
+        head = params.get("lm_head")
+        return x @ (head if head is not None else params["embed"].T)
+
+    def _dense_step_impl(self, params, slabs, cache, idx, tokens, pos):
         """tokens: (B,1) int32, pos: (B,) int32, idx: (B,) int32 slab slots
         -> (logits (B,V), cache)."""
         self.trace_count += 1   # side effect fires at trace time only
-        cfg = self.cfg
-        x = jnp.take(params["embed"], tokens, axis=0)          # (B,1,d)
-        if cfg.rope_theta == 0:
-            x = x * math.sqrt(cfg.d_model) + sinusoidal_positions(
-                pos[:, None], cfg.d_model).astype(x.dtype)
+        x = self._embed(params, tokens, pos[:, None])
 
         def scan_body(carry, xs):
             lp, slab_l, lc = xs
-            y, new_lc = _layer_decode(carry, lp, slab_l, lc, idx, pos, cfg,
-                                      self.use_pallas)
+            y, new_lc = _layer_decode_dense(carry, lp, slab_l, lc, idx, pos,
+                                            self.cfg, self.use_pallas)
             return y, new_lc
 
         x, new_cache = lax.scan(scan_body, x,
                                 (params["layers"], slabs, cache))
         x = norm(x, params["final_norm"])
-        head = params.get("lm_head")
-        logits = x[:, 0, :] @ (head if head is not None
-                               else params["embed"].T)
-        return logits, new_cache
+        return self._logits(params, x[:, 0, :]), new_cache
+
+    def _paged_step_impl(self, params, slabs, pools, tables, idx, tokens,
+                         pos, lens):
+        """tokens: (B,1), pos: (B,), lens: (B,) valid tokens incl. this
+        one (0 for inactive rows), tables: (B,P) -> (logits, pools)."""
+        self.trace_count += 1
+        ps = self.page_size
+        x = self._embed(params, tokens, pos[:, None])
+        page = jnp.take_along_axis(tables, (pos // ps)[:, None], axis=1)[:, 0]
+        page = jnp.where(lens > 0, page, self.kv.trash)  # inactive -> trash
+        slot = pos % ps
+
+        def scan_body(carry, xs):
+            lp, slab_l, lc = xs
+            y, new_lc = _layer_decode_paged(
+                carry, lp, slab_l, lc, idx, pos, lens, page, slot, tables,
+                self.cfg, self.use_pallas, ps)
+            return y, new_lc
+
+        x, new_pools = lax.scan(scan_body, x,
+                                (params["layers"], slabs, pools))
+        x = norm(x, params["final_norm"])
+        return self._logits(params, x[:, 0, :]), new_pools
+
+    def _prefill_impl(self, params, slabs, pools, table_row, idx, tokens,
+                      pos0, nvalid):
+        """One chunk of one row's prompt. table_row: (1,P), idx: (1,),
+        tokens: (1,C), pos0/nvalid: traced scalars (chunk offset / valid
+        tokens in this chunk) -> (logits (C,V), pools)."""
+        self.trace_count += 1
+        ps = self.page_size
+        c = tokens.shape[1]
+        p = table_row.shape[1]
+        tpos = pos0 + jnp.arange(c, dtype=jnp.int32)[None, :]    # (1, C)
+        x = self._embed(params, tokens, tpos)
+        pageidx = jnp.minimum(tpos[0] // ps, p - 1)
+        page = jnp.take(table_row[0], pageidx)
+        page = jnp.where(jnp.arange(c) < nvalid, page, self.kv.trash)
+        slot = tpos[0] % ps
+
+        def scan_body(carry, xs):
+            lp, slab_l, lc = xs
+            y, new_lc = _layer_prefill_paged(
+                carry, lp, slab_l, lc, idx, tpos, page, slot, table_row,
+                pos0, self.cfg, self.use_pallas, ps)
+            return y, new_lc
+
+        x, new_pools = lax.scan(scan_body, x,
+                                (params["layers"], slabs, pools))
+        x = norm(x, params["final_norm"])
+        return self._logits(params, x[0]), new_pools
 
     @staticmethod
     def _reset_impl(cache, row_mask):
@@ -191,10 +414,15 @@ class ServeEngine:
     def submit(self, prompt, adapter_id: str,
                max_new_tokens: int = 16) -> str:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if prompt.size + max_new_tokens > self.max_seq:
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        total = prompt.size + max_new_tokens
+        if total > self.row_capacity():
+            what = (f"{self.kv.pages_for(total)} pages" if
+                    self.kv_mode == "paged" else f"max_seq {self.max_seq}")
             raise ValueError(
-                f"prompt+generation {prompt.size + max_new_tokens} exceeds "
-                f"max_seq {self.max_seq}")
+                f"prompt+generation {total} exceeds per-request capacity "
+                f"{self.row_capacity()} ({what})")
         if not self.registry.has(adapter_id):
             raise KeyError(f"unknown adapter {adapter_id!r}")
         uid = f"req{self._uid}"
@@ -204,29 +432,135 @@ class ServeEngine:
                             "adapter": adapter_id})
         return uid
 
-    def _admit(self) -> None:
+    def _finish(self, row: int, req: dict) -> None:
+        self._done[req["uid"]] = np.asarray(req["out"], np.int32)
+        self.registry.release(req["adapter"])
+        if self.kv_mode == "paged":
+            self.kv.release(row)
+        self._rows[row] = None
+
+    def _preempt(self, row: int) -> None:
+        """Evict a row: free its pages + adapter pin and replay the
+        request from scratch later (greedy decode is deterministic, so
+        the re-run reproduces the same tokens)."""
+        req = self._rows[row]
+        self.registry.release(req["adapter"])
+        self.kv.release(row)
+        req.update(t=0, out=[])
+        req.pop("slot", None)
+        self._queue.appendleft(req)
+        self._rows[row] = None
+        self.preemptions += 1
+
+    def _admit(self) -> int:
+        admitted = 0
         freed = np.zeros((self.max_batch,), bool)
         any_freed = False
         for row in range(self.max_batch):
             if self._rows[row] is None and self._queue:
+                head = self._queue[0]
+                if self.kv_mode == "paged":
+                    # Page-gated admission: cover the prompt plus the
+                    # first generated token; later growth extends.
+                    need = self.kv.pages_for(head["prompt"].size + 1)
+                    if self.kv.allocator.free_count < need:
+                        self.deferrals += 1
+                        break   # FCFS: wait for pages, don't starve head
                 try:
-                    slot = self.registry.acquire(self._queue[0]["adapter"])
+                    slot = self.registry.acquire(head["adapter"])
                 except RuntimeError:
                     break   # every slab slot pinned: wait for a release
                 req = self._queue.popleft()
                 req["slot"] = slot
                 self._rows[row] = req
-                freed[row] = True
-                any_freed = True
+                admitted += 1
+                if self.kv_mode == "paged":
+                    if not self.kv.admit(row, need):   # free_count said yes
+                        raise RuntimeError(
+                            f"page accounting violated: admission of row "
+                            f"{row} failed after the free-count check")
+                    self._prefill_row(row, req)
+                else:
+                    freed[row] = True
+                    any_freed = True
         if any_freed:
             self.cache = self._reset(self.cache, jnp.asarray(freed))
+        return admitted
+
+    def _prefill_row(self, row: int, req: dict) -> None:
+        """Chunked prefill: the whole prompt in ceil(len/chunk) jitted
+        dispatches, then the first generated token from the last valid
+        logit. The row joins the decode batch already past its prompt."""
+        prompt = req["prompt"]
+        c = self.prefill_chunk
+        idx = jnp.asarray([req["slot"]], jnp.int32)
+        logits = None
+        nv = 0
+        for lo in range(0, prompt.size, c):
+            nv = min(c, prompt.size - lo)
+            # Fresh buffer every chunk: device_put can alias numpy memory
+            # on CPU, and the previous chunk's dispatch may still be
+            # reading it asynchronously — mutating in place races.
+            toks = np.zeros((1, c), np.int32)
+            toks[0, :nv] = prompt[lo:lo + nv]
+            logits, pools = self._prefill(
+                self.params, self.registry.slabs(), self.kv.pools,
+                self.kv.device_tables()[row:row + 1], idx,
+                jnp.asarray(toks), np.int32(lo), np.int32(nv))
+            self.kv.pools = pools
+            self.prefill_calls += 1
+        self.prefill_tokens += int(prompt.size)
+        first = int(jnp.argmax(logits[nv - 1]))
+        req["t"] = int(prompt.size)
+        req["out"] = [first]
+        self.tokens_generated += 1
+        if len(req["out"]) >= req["max_new"]:
+            self._finish(row, req)
+
+    def _ensure_pages(self) -> None:
+        """Every active row must own the page its next token lands in;
+        extend, preempting the youngest other rows when the pool is dry."""
+        for row in range(self.max_batch):
+            req = self._rows[row]
+            if req is None:
+                continue
+            needed = req["t"] // self.page_size + 1
+            if self.kv.allocated(row) >= needed:
+                continue
+            grow = needed - self.kv.allocated(row)
+            if not self.kv.extend(row, grow):
+                self.kv.allocator.pin(row)
+                victims = self.kv.allocator.victims(grow)
+                self.kv.allocator.unpin(row)
+                if victims is None:
+                    raise RuntimeError(
+                        f"KV pool exhausted: row {row} needs {grow} more "
+                        f"page(s) and no unpinned row can be preempted")
+                for victim in victims:
+                    self._preempt(int(victim))
+                if not self.kv.extend(row, grow):  # victims covered grow
+                    raise RuntimeError(
+                        f"page accounting violated: row {row} cannot "
+                        f"extend by {grow} page(s) after preemption")
 
     def step_batch(self) -> None:
-        """Admit, run one decode step, harvest/advance/recycle."""
-        self._admit()
+        """Admit (+prefill), page, run one decode step, harvest/recycle."""
+        admitted = self._admit()
+        if self.kv_mode == "paged":
+            self._ensure_pages()
         active = [(i, r) for i, r in enumerate(self._rows) if r is not None]
         if not active:
-            if self._queue:
+            # admitted rows may have finished inside _admit (prefill +
+            # max_new=1): that is progress, not a stall
+            if self._queue and admitted == 0:
+                if self.kv_mode == "paged" and \
+                        self.kv.allocator.free_count < self.kv.pages_for(
+                            self._queue[0]["prompt"].size + 1):
+                    # no row active yet pages are missing: pinned by
+                    # someone outside this engine
+                    raise RuntimeError(
+                        f"{len(self._queue)} queued requests but the page "
+                        f"pool is exhausted and no row is active")
                 # no row made progress and none will: every slab slot is
                 # pinned by someone outside this engine
                 raise RuntimeError(
@@ -236,15 +570,28 @@ class ServeEngine:
         tokens = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
         idx = np.zeros((self.max_batch,), np.int32)
+        lens = np.zeros((self.max_batch,), np.int32)
         for i, req in active:
             t = req["t"]
+            if self.kv_mode == "dense" and t >= self.max_seq:
+                raise RuntimeError(
+                    f"row {i} reached position {t} >= max_seq "
+                    f"{self.max_seq}: the dense ring would wrap and "
+                    f"corrupt attention (writes are dropped instead)")
             tokens[i, 0] = req["prompt"][t] if t < req["prompt"].size \
                 else req["out"][-1]
             pos[i] = t
             idx[i] = req["slot"]
-        logits, self.cache = self._step(
-            self.params, self.registry.slabs(), self.cache,
-            jnp.asarray(idx), jnp.asarray(tokens), jnp.asarray(pos))
+            lens[i] = t + 1
+        if self.kv_mode == "paged":
+            logits, self.kv.pools = self._step(
+                self.params, self.registry.slabs(), self.kv.pools,
+                self.kv.device_tables(), jnp.asarray(idx),
+                jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(lens))
+        else:
+            logits, self.cache = self._step(
+                self.params, self.registry.slabs(), self.cache,
+                jnp.asarray(idx), jnp.asarray(tokens), jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.steps += 1
         for i, req in active:
@@ -253,9 +600,7 @@ class ServeEngine:
                 req["out"].append(int(nxt[i]))
                 self.tokens_generated += 1
             if len(req["out"]) >= req["max_new"]:    # finished: recycle row
-                self._done[req["uid"]] = np.asarray(req["out"], np.int32)
-                self.registry.release(req["adapter"])
-                self._rows[i] = None
+                self._finish(i, req)
 
     def run(self) -> Dict[str, np.ndarray]:
         """Drive until every submitted request has finished."""

@@ -1,0 +1,217 @@
+"""Paged KV cache: global page pools, host free-list allocator, page tables.
+
+The dense serving cache gives every request row its own ``(max_seq, Hkv,
+Dh)`` strip, so admission is bounded by the *longest possible* request
+even when traffic is short and ragged (exactly the HLoRA workload:
+heterogeneous-rank federated clients with wildly different prompts).
+This module replaces that with the PagedAttention/vLLM design on fixed
+shapes:
+
+**Page pool** — one global ``(L, num_pages + 1, page_size, Hkv, Dh)``
+array per K and V (layer-stacked so the decode ``lax.scan`` slices it
+for free).  Page ``num_pages`` is the **trash page**: writes for padded
+prefill tokens and inactive batch rows are steered there, so every
+jitted step writes unconditionally with fixed shapes and garbage never
+lands in a live page.
+
+**Page table** — ``(max_batch, max_pages_per_row)`` int32, host-owned
+(numpy) and uploaded per step.  The fixed-shape contract the jitted
+steps and the Pallas kernel rely on:
+
+* entry ``j`` of row ``b`` names the pool page holding that row's
+  absolute positions ``[j * page_size, (j+1) * page_size)``;
+* pages are assigned to a row in position order, so a slot's absolute
+  position is *implicit* — slot ``s`` of table entry ``j`` is position
+  ``j * page_size + s``; no position array is stored or masked on;
+* unallocated entries point at the trash page; a per-row ``length``
+  (tokens written so far) is the only validity signal attention needs,
+  because everything at positions ``>= length`` is either unwritten or
+  trash-mapped.
+
+**Allocator** — a host-side free list over page ids with per-owner
+bookkeeping: ``alloc`` (admission), ``extend`` (a decode crossing a page
+boundary), ``free`` (finish/preempt).  A page is never owned twice;
+``pin`` protects an in-flight owner from being chosen as a preemption
+victim while the scheduler reclaims pages on its behalf.  All of this is
+pure Python over ints: admission, extension, and eviction mutate *values*
+only (the numpy table and the pool via ``.at[...].set``), so the jitted
+step never retraces.
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import init_paged_kv_pool
+
+
+class PageAllocator:
+    """Free-list page allocator with ownership, pinning, and victim scan."""
+
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError(f"num_pages must be positive, got {num_pages}")
+        self.num_pages = int(num_pages)
+        # Stack of free ids; low ids come off first (cosmetic, not load-
+        # bearing: correctness only needs disjointness).
+        self._free: List[int] = list(range(self.num_pages - 1, -1, -1))
+        self._owned: Dict[Hashable, List[int]] = {}
+        self._pinned: set = set()
+        self._clock = 0
+        self._born: Dict[Hashable, int] = {}   # owner -> admission order
+
+    # -- core ---------------------------------------------------------------
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def owners(self) -> List[Hashable]:
+        return list(self._owned)
+
+    def pages_of(self, owner: Hashable) -> List[int]:
+        return list(self._owned.get(owner, ()))
+
+    def alloc(self, owner: Hashable, n: int) -> Optional[List[int]]:
+        """Give ``owner`` its first ``n`` pages; None (state unchanged) if
+        the pool cannot cover them. Owners are single-shot: re-allocating
+        a live owner is a bug, not an extension."""
+        if owner in self._owned:
+            raise ValueError(f"owner {owner!r} already holds pages")
+        if n < 0:
+            raise ValueError(f"negative page count {n}")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[owner] = pages
+        self._born[owner] = self._clock
+        self._clock += 1
+        return pages
+
+    def extend(self, owner: Hashable, n: int = 1) -> Optional[List[int]]:
+        """Append ``n`` more pages to a live owner; None if the pool is
+        dry (state unchanged — the caller decides whether to preempt)."""
+        if owner not in self._owned:
+            raise KeyError(f"unknown owner {owner!r}")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned[owner].extend(pages)
+        return pages
+
+    def free(self, owner: Hashable) -> List[int]:
+        """Return all of ``owner``'s pages to the pool."""
+        pages = self._owned.pop(owner, [])
+        self._born.pop(owner, None)
+        self._pinned.discard(owner)
+        self._free.extend(pages)
+        return pages
+
+    # -- pinning / preemption -----------------------------------------------
+
+    def pin(self, owner: Hashable) -> None:
+        """Protect an in-flight owner from the victim scan (e.g. the row
+        whose extension triggered the reclaim)."""
+        if owner not in self._owned:
+            raise KeyError(f"unknown owner {owner!r}")
+        self._pinned.add(owner)
+
+    def unpin(self, owner: Hashable) -> None:
+        self._pinned.discard(owner)
+
+    def pinned(self, owner: Hashable) -> bool:
+        return owner in self._pinned
+
+    def victims(self, n_needed: int) -> Optional[List[Hashable]]:
+        """Youngest-first un-pinned owners whose pages, freed together
+        with the current free list, cover ``n_needed``; None if even
+        freeing every candidate would not suffice. Does not free —
+        the scheduler owns request-level teardown."""
+        if n_needed <= len(self._free):
+            return []
+        chosen: List[Hashable] = []
+        covered = len(self._free)
+        for owner in sorted(self._owned, key=lambda o: -self._born[o]):
+            if owner in self._pinned:
+                continue
+            chosen.append(owner)
+            covered += len(self._owned[owner])
+            if covered >= n_needed:
+                return chosen
+        return None
+
+    # -- invariants (cheap enough to assert in tests) -----------------------
+
+    def check(self) -> None:
+        """Every page is either free or owned by exactly one owner."""
+        seen = list(self._free)
+        for pages in self._owned.values():
+            seen.extend(pages)
+        if sorted(seen) != list(range(self.num_pages)):
+            raise AssertionError(
+                f"page conservation violated: {sorted(seen)}")
+
+
+class PagedKV:
+    """Device page pools + host allocator + host page tables, as one unit.
+
+    The engine threads ``pools`` through its jitted steps and re-assigns
+    the result; everything else here is host state. Rows are identified
+    by their batch index.
+    """
+
+    def __init__(self, num_layers: int, num_pages: int, page_size: int,
+                 max_pages_per_row: int, max_batch: int, kv_heads: int,
+                 head_dim: int, dtype=jnp.float32):
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.max_pages_per_row = int(max_pages_per_row)
+        self.max_batch = int(max_batch)
+        self.trash = self.num_pages          # the sacrificial write target
+        self.pools = init_paged_kv_pool(num_layers, num_pages, page_size,
+                                        kv_heads, head_dim, dtype=dtype)
+        self.allocator = PageAllocator(num_pages)
+        self.tables = np.full((max_batch, max_pages_per_row), self.trash,
+                              np.int32)
+
+    # -- sizing -------------------------------------------------------------
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-int(tokens) // self.page_size)
+
+    def row_capacity(self) -> int:
+        """Tokens one row can ever hold (the paged analogue of max_seq)."""
+        return min(self.max_pages_per_row, self.num_pages) * self.page_size
+
+    def nbytes(self) -> int:
+        return sum(int(x.nbytes) for x in jax.tree.leaves(self.pools))
+
+    # -- row lifecycle (mutates the numpy table + allocator only) -----------
+
+    def admit(self, row: int, n_pages: int) -> bool:
+        pages = self.allocator.alloc(row, n_pages)
+        if pages is None:
+            return False
+        self.tables[row, :n_pages] = pages
+        return True
+
+    def extend(self, row: int, n_pages: int = 1) -> bool:
+        held = len(self.allocator.pages_of(row))
+        pages = self.allocator.extend(row, n_pages)
+        if pages is None:
+            return False
+        self.tables[row, held:held + n_pages] = pages
+        return True
+
+    def release(self, row: int) -> None:
+        self.allocator.free(row)
+        self.tables[row, :] = self.trash
+
+    def allocated(self, row: int) -> int:
+        return len(self.allocator.pages_of(row))
+
+    def device_tables(self) -> jax.Array:
+        return jnp.asarray(self.tables)

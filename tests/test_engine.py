@@ -257,6 +257,42 @@ def test_engine_rejects_unknown_strategy():
 
 
 # ---------------------------------------------------------------------------
+# Backend autotune (use_pallas=None -> timed probe, cached per shape)
+# ---------------------------------------------------------------------------
+
+def test_autotune_probe_cached_per_shape(monkeypatch):
+    agg_engine._AUTOTUNE_CACHE.clear()
+    tree = {"q": _stacked(6, k=3, d_in=32, d_out=32)}
+    eta = jnp.array([1.0, 2.0, 1.0])
+    eng = agg_engine.AggregationEngine()          # use_pallas=None
+    got, _ = eng(tree, eta, ALPHA, method="exact")
+    # one distinct recon shape -> one cached decision, keyed by shape+dtype
+    assert list(agg_engine._AUTOTUNE_CACHE) == [(3, 32, 8, 32, "float32")]
+    # once cached, no call may ever re-time this shape — poison the clock
+    def boom():
+        raise AssertionError("autotune re-timed a cached shape")
+    monkeypatch.setattr(agg_engine.time, "perf_counter", boom)
+    eng(tree, eta, ALPHA, method="exact")         # same engine: cache hit
+    eng2 = agg_engine.AggregationEngine()
+    eng2(tree, eta, ALPHA, method="exact")        # new engine: cache hit
+    # numerics unchanged vs the forced-einsum engine
+    ref_eng = agg_engine.AggregationEngine(use_pallas=False)
+    ref, _ = ref_eng(tree, eta, ALPHA, method="exact")
+    _assert_trees_close(got, ref, rtol=1e-3, atol=1e-4)
+
+
+def test_autotune_skipped_when_kernel_never_runs(monkeypatch):
+    """method='factored' never touches recon_agg — no probe must fire."""
+    called = []
+    monkeypatch.setattr(agg_engine, "_probe_recon_backend",
+                        lambda *a: called.append(a) or False)
+    eng = agg_engine.AggregationEngine()
+    eng(_tree(), jnp.ones((4,)), ALPHA, method="factored")
+    eng(_tree(), jnp.ones((4,)), ALPHA, strategy="naive")
+    assert called == []
+
+
+# ---------------------------------------------------------------------------
 # Async submit equivalence: engine-backed server == seed per-target math
 # ---------------------------------------------------------------------------
 

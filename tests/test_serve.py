@@ -5,6 +5,12 @@ heterogeneous-rank multi-LoRA decode vs the per-request merged-weight
 oracle, continuous batching with row recycling, and retrace-free
 hot-swap. This is the test that would have caught the PR-1
 ``TPUCompilerParams`` API drift before it reached main.
+
+The engine defaults to the paged KV cache with chunked prefill
+(PR 3), so these tests pin that path; the retained dense ring cache is
+covered explicitly (``kv_mode="dense"``), including the wrap-instead-
+of-corrupt regression. A paged engine traces exactly twice: once for
+the chunked-prefill step, once for the decode step.
 """
 import jax
 import numpy as np
@@ -19,6 +25,7 @@ from repro.serve.oracle import make_demo_adapter, merged_greedy
 RANKS = (2, 4, 6, 8)
 PROMPT_LEN = 6
 STEPS = 10
+PAGED_TRACES = 2   # one prefill trace + one decode trace
 
 
 @pytest.fixture(scope="module")
@@ -51,7 +58,7 @@ def test_batched_heterogeneous_decode_matches_merged_oracle(setup):
     uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
                           max_new_tokens=STEPS) for i in range(8)]
     outs = engine.run()
-    assert engine.trace_count == 1
+    assert engine.trace_count == PAGED_TRACES
     for i, uid in enumerate(uids):
         want = merged_greedy(params, cfg, prompts[i],
                              adapters[f"client{i % len(RANKS)}"], STEPS)
@@ -90,7 +97,7 @@ def test_continuous_batching_recycles_rows(setup):
     uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
                           max_new_tokens=lens[i]) for i in range(5)]
     outs = engine.run()
-    assert engine.trace_count == 1
+    assert engine.trace_count == PAGED_TRACES
     for i, uid in enumerate(uids):
         want = merged_greedy(params, cfg, prompts[i],
                              adapters[f"client{i % len(RANKS)}"], lens[i])
@@ -164,3 +171,156 @@ def test_submit_rejections(setup):
     with pytest.raises(KeyError):
         engine.submit(np.arange(2, dtype=np.int32), "nobody",
                       max_new_tokens=2)
+
+
+# ---------------------------------------------------------------------------
+# Paged KV specifics
+# ---------------------------------------------------------------------------
+
+def test_paged_matches_dense_and_oracle(setup):
+    """The paged engine, the dense fallback, and the merged-weight oracle
+    all agree token-for-token on the same traffic."""
+    cfg, params, adapters, prompts = setup
+    outs = {}
+    for mode in ("paged", "dense"):
+        engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                             max_batch=4, max_seq=PROMPT_LEN + STEPS,
+                             kv_mode=mode, page_size=4, prefill_chunk=4)
+        uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
+                              max_new_tokens=STEPS) for i in range(4)]
+        done = engine.run()
+        outs[mode] = [done[u] for u in uids]
+    for i in range(4):
+        want = merged_greedy(params, cfg, prompts[i],
+                             adapters[f"client{i % len(RANKS)}"], STEPS)
+        np.testing.assert_array_equal(outs["paged"][i], want)
+        np.testing.assert_array_equal(outs["dense"][i], want)
+
+
+def test_paged_oversubscription_defers_and_preempts(setup):
+    """A pool with fewer pages than the traffic needs: admission defers,
+    decode-time extension preempts, and every request still finishes
+    with oracle-exact tokens — with zero retraces throughout."""
+    cfg, params, adapters, prompts = setup
+    engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                         max_batch=8, max_seq=PROMPT_LEN + STEPS,
+                         page_size=4, num_pages=10, prefill_chunk=4)
+    uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
+                          max_new_tokens=STEPS) for i in range(8)]
+    outs = engine.run()
+    assert engine.deferrals > 0          # pool was actually oversubscribed
+    assert engine.trace_count == PAGED_TRACES
+    engine.kv.allocator.check()          # no page leaked or double-owned
+    assert engine.kv.allocator.free_count == engine.kv.num_pages
+    for i, uid in enumerate(uids):
+        want = merged_greedy(params, cfg, prompts[i],
+                             adapters[f"client{i % len(RANKS)}"], STEPS)
+        np.testing.assert_array_equal(outs[uid], want)
+
+
+def test_paged_admits_beyond_dense_bound(setup):
+    """The page pool admits concurrent traffic a dense cache of the same
+    memory could not: 4 short requests through a pool whose bytes equal
+    a 2-row dense cache."""
+    cfg, params, adapters, prompts = setup
+    # dense: 2 rows x 16 slots; paged: pool of 8 pages x 4 slots = same
+    # token capacity, but spread over 4 concurrent rows.
+    engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                         max_batch=4, max_seq=16, page_size=4, num_pages=8,
+                         prefill_chunk=4)
+    uids = [engine.submit(prompts[i][:4], f"client{i}", max_new_tokens=4)
+            for i in range(4)]   # 8 tokens each = 2 pages each
+    outs = engine.run()
+    assert set(outs) == set(uids)
+    assert engine.deferrals == 0         # all 4 admitted concurrently
+    for i, uid in enumerate(uids):
+        want = merged_greedy(params, cfg, prompts[i][:4],
+                             adapters[f"client{i}"], 4)
+        np.testing.assert_array_equal(outs[uid], want)
+
+
+def test_paged_trace_flat_across_page_extensions(setup):
+    """Crossing page boundaries (1-token prompt growing 12 tokens across
+    3 pages) extends the row's page list without retracing."""
+    cfg, params, adapters, prompts = setup
+    engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                         max_batch=2, max_seq=16, page_size=4,
+                         prefill_chunk=4)
+    uid = engine.submit(prompts[0][:2], "client0", max_new_tokens=12)
+    outs = engine.run()
+    assert engine.trace_count == PAGED_TRACES
+    want = merged_greedy(params, cfg, prompts[0][:2], adapters["client0"],
+                         12)
+    np.testing.assert_array_equal(outs[uid], want)
+
+
+def test_prefill_chunk_size_does_not_change_tokens(setup):
+    """Chunked prefill is an evaluation strategy, not a semantic change:
+    any chunk size produces identical greedy tokens."""
+    cfg, params, adapters, prompts = setup
+    ref_out = None
+    for chunk in (1, 3, 4, 16):
+        engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                             max_batch=2, max_seq=PROMPT_LEN + STEPS,
+                             page_size=4, prefill_chunk=chunk)
+        uid = engine.submit(prompts[1], "client1", max_new_tokens=STEPS)
+        out = engine.run()[uid]
+        if ref_out is None:
+            ref_out = out
+        else:
+            np.testing.assert_array_equal(out, ref_out)
+    want = merged_greedy(params, cfg, prompts[1], adapters["client1"],
+                         STEPS)
+    np.testing.assert_array_equal(ref_out, want)
+
+
+def test_paged_engine_pallas_kernels_interpret(setup):
+    """The TPU code path end-to-end (BGMV + paged_attn decode + flash
+    chunked prefill, all in interpret mode): same greedy tokens as the
+    merged oracle, including a pool capacity that is not a multiple of
+    the flash block size."""
+    cfg, params, adapters, prompts = setup
+    # 33 pages x 8 slots = 264-token row capacity: NOT a multiple of the
+    # 256 default flash block — the prefill path must pick a dividing
+    # block size instead of tripping the kernel's tiling assert.
+    engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                         max_batch=2, max_seq=264,
+                         page_size=8, prefill_chunk=4, use_pallas=True)
+    uid = engine.submit(prompts[2], "client2", max_new_tokens=3)
+    outs = engine.run()
+    want = merged_greedy(params, cfg, prompts[2], adapters["client2"], 3)
+    np.testing.assert_array_equal(outs[uid], want)
+
+
+# ---------------------------------------------------------------------------
+# Dense-ring fallback regression (the PR-3 satellite bugfix)
+# ---------------------------------------------------------------------------
+
+def test_dense_ring_overflow_raises_not_corrupts(setup):
+    """A row driven past its ring must fail loudly. The seed engine
+    silently wrapped ``pos % slots``, overwriting the oldest live slots
+    while the validity mask still reported them current."""
+    cfg, params, adapters, prompts = setup
+    engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                         max_batch=1, max_seq=8, kv_mode="dense")
+    uid = engine.submit(prompts[0][:4], "client0", max_new_tokens=4)
+    # bypass submit's guard, as a scheduler bug or future code path might
+    engine._queue[0]["max_new"] = 10
+    with pytest.raises(RuntimeError, match="ring"):
+        engine.run()
+    del uid
+
+
+def test_dense_insert_drops_out_of_range_writes():
+    """The traced insert itself fails safe: an out-of-range position
+    leaves the cache bit-identical instead of wrapping onto slot 0."""
+    from repro.serve.engine import _cache_insert_rows
+    lc = {"k": jax.numpy.ones((2, 4, 1, 8)),
+          "v": jax.numpy.ones((2, 4, 1, 8)),
+          "pos": jax.numpy.zeros((2, 4), jax.numpy.int32)}
+    k_new = jax.numpy.full((2, 1, 1, 8), 7.0)
+    out = _cache_insert_rows(lc, k_new, k_new,
+                             jax.numpy.asarray([5, 9], jax.numpy.int32))
+    np.testing.assert_array_equal(np.asarray(out["k"]), np.asarray(lc["k"]))
+    np.testing.assert_array_equal(np.asarray(out["pos"]),
+                                  np.asarray(lc["pos"]))

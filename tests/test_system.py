@@ -1,4 +1,8 @@
-"""End-to-end behaviour of the full system (the paper's pipeline)."""
+"""End-to-end behaviour of the full system (the paper's pipeline),
+plus the benchmark harness's result-merge contract."""
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -92,3 +96,28 @@ def test_fed_lora_deployable_merge(setup):
     np.testing.assert_allclose(np.asarray(logits_adapter),
                                np.asarray(logits_merged),
                                rtol=2e-3, atol=2e-3)
+
+
+def test_bench_merge_preserves_sections_on_failure(tmp_path):
+    """A failing bench section must not clobber its previous good numbers
+    (they stay, the error lands under '_errors'), a succeeding section
+    clears its stale error, and untouched sections persist."""
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import merge_results
+    path = str(tmp_path / "bench.json")
+    merge_results(path, {"serve": {"x": 1}, "svd": {"y": 2}}, {})
+    merge_results(path, {"svd": {"y": 3}}, {"serve": "RuntimeError: boom"})
+    got = json.load(open(path))
+    assert got["serve"] == {"x": 1}          # old numbers survive
+    assert got["svd"] == {"y": 3}            # re-run section updated
+    assert got["_errors"] == {"serve": "RuntimeError: boom"}
+    merge_results(path, {"serve": {"x": 9}}, {})
+    got = json.load(open(path))
+    assert got["serve"] == {"x": 9} and "_errors" not in got
+    # corrupt previous file: start fresh instead of crashing
+    with open(path, "w") as f:
+        f.write("{not json")
+    merge_results(path, {"comm": {"z": 1}}, {})
+    assert json.load(open(path)) == {"comm": {"z": 1}}
