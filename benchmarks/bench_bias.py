@@ -23,10 +23,14 @@ from repro.optim import adamw
 
 
 def run(local_steps_grid=(2, 8, 24), quick=False):
+    # quick is a smoke mode: one grid point at toy data/pretrain sizes —
+    # it checks the pipeline runs, not the bias magnitudes
     if quick:
-        local_steps_grid = (2, 8)
+        local_steps_grid = (2,)
     cfg = get_reduced("roberta-large")
-    sim = SimConfig(task="rte", num_examples=2048, pretrain_steps=200,
+    sim = SimConfig(task="rte",
+                    num_examples=256 if quick else 2048,
+                    pretrain_steps=10 if quick else 200,
                     dirichlet_alpha=0.1, lr=1e-3, local_batch=16)
     base = pretrain_backbone(cfg, sim)
     frozen, _ = split_head(base)

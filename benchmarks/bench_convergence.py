@@ -33,14 +33,20 @@ STRATEGIES = [
 
 def run(tasks=("mrpc", "rte", "qqp"), seeds=(0, 1), rounds=14,
         quick=False) -> Dict:
+    # quick is a smoke mode: one task/seed, toy data, a few rounds — it
+    # checks every strategy still trains end-to-end, not the accuracies
     if quick:
-        tasks, seeds, rounds = ("mrpc",), (0,), 6
+        tasks, seeds, rounds = ("mrpc",), (0,), 3
     cfg = get_reduced("roberta-large")
     results: Dict[str, Dict[str, List]] = {}
     for task in tasks:
-        sim0 = SimConfig(task=task, num_examples=4096, eval_examples=1024,
-                         rounds=rounds, local_steps=8, local_batch=16,
-                         pretrain_steps=300, dirichlet_alpha=0.3, lr=1e-3)
+        sim0 = SimConfig(task=task,
+                         num_examples=512 if quick else 4096,
+                         eval_examples=128 if quick else 1024,
+                         rounds=rounds, local_steps=4 if quick else 8,
+                         local_batch=16,
+                         pretrain_steps=20 if quick else 300,
+                         dirichlet_alpha=0.3, lr=1e-3)
         base = pretrain_backbone(cfg, sim0)
         for strat, policy, label in STRATEGIES:
             curves = []
@@ -51,7 +57,8 @@ def run(tasks=("mrpc", "rte", "qqp"), seeds=(0, 1), rounds=14,
                     h = run_centralized(cfg, sim, rank=8, base_params=base)
                 else:
                     scfg = ServerConfig(
-                        num_clients=30, clients_per_round=10,
+                        num_clients=10 if quick else 30,
+                        clients_per_round=4 if quick else 10,
                         strategy=strat, rank_policy=policy,
                         r_min=2, r_max=8, seed=seed)
                     h = run_experiment(cfg, sim, scfg, base_params=base)

@@ -23,6 +23,13 @@ Part 3 — prefill: chunked (one dispatch per ``prefill_chunk`` tokens,
 flash attention at q_offset) vs token-at-a-time teacher forcing on a
 long prompt. Acceptance: ≥ 3× prompt tokens/sec.
 
+Part 4 — speculative decode (PR 4): plain paged decode vs draft–verify
+with the forced-accept scripted drafter (the acceptance-rate ceiling —
+every dispatch commits spec_k + 1 tokens; ≥ 1.5× tok/s required) and
+with the zero-cost n-gram prompt-lookup drafter on repetitive traffic.
+Both are lossless: outputs are asserted byte-identical to plain decode.
+Emits acceptance rate, tok/s vs plain, and rollback page counts.
+
 Each path runs one warmup wave first so compile time is excluded from
 every side (steady-state throughput is the serving metric; a fleet
 compiles once and serves forever).
@@ -37,7 +44,8 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_reduced
 from repro.models import model as model_lib
-from repro.serve import AdapterRegistry, ServeEngine
+from repro.serve import (AdapterRegistry, NGramDrafter, ScriptedDrafter,
+                         ServeEngine)
 from repro.serve.oracle import (factored_greedy, make_demo_adapter,
                                 merged_greedy)
 
@@ -63,24 +71,25 @@ def _registry(cfg, adapters):
 
 
 def _throughput_wave(results, cfg, key, params, adapters, quick):
+    n_req = 4 if quick else NUM_REQ
     steps = 8 if quick else 16
     prompt_len = 8
     registry = _registry(cfg, adapters)
     prompts = np.asarray(jax.random.randint(
-        jax.random.fold_in(key, 3), (NUM_REQ, prompt_len), 3,
+        jax.random.fold_in(key, 3), (n_req, prompt_len), 3,
         cfg.vocab_size))
     req_trees = [adapters[f"client{i % len(RANKS)}"]
-                 for i in range(NUM_REQ)]
-    total_tok = NUM_REQ * steps
+                 for i in range(n_req)]
+    total_tok = n_req * steps
 
-    engine = ServeEngine(params, cfg, registry, max_batch=NUM_REQ,
+    engine = ServeEngine(params, cfg, registry, max_batch=n_req,
                          max_seq=prompt_len + steps, page_size=8,
                          prefill_chunk=prompt_len)
 
     def engine_wave():
         uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
                               max_new_tokens=steps)
-                for i in range(NUM_REQ)]
+                for i in range(n_req)]
         t0 = time.time()
         outs = engine.run()
         return time.time() - t0, uids, outs
@@ -90,7 +99,7 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
     results["engine_tok_per_s"] = total_tok / t_engine
     results["engine_traces"] = engine.trace_count
     emit("serve/engine", t_engine * 1e6 / total_tok,
-         f"{results['engine_tok_per_s']:.0f} tok/s over {NUM_REQ} req x "
+         f"{results['engine_tok_per_s']:.0f} tok/s over {n_req} req x "
          f"{steps} tok, traces={engine.trace_count}")
 
     # hot-swap one adapter mid-deployment; retraces must stay flat
@@ -109,11 +118,11 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
 
     def naive_all():
         return [factored_greedy(params, cfg, prompts[i], req_trees[i],
-                                steps) for i in range(NUM_REQ)]
+                                steps) for i in range(n_req)]
 
     def merged_all():
         return [merged_greedy(params, cfg, prompts[i], req_trees[i],
-                              steps) for i in range(NUM_REQ)]
+                              steps) for i in range(n_req)]
 
     factored_greedy(params, cfg, prompts[0], req_trees[0], steps)  # warmup
     t0 = time.time()
@@ -133,29 +142,30 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
 
     match = sum(int((outs_engine[u] == o).all())
                 for u, o in zip(uids, outs_merged))
-    results["engine_vs_merged_exact"] = match / NUM_REQ
+    results["engine_vs_merged_exact"] = match / n_req
     results["naive_vs_merged_exact"] = sum(
         int((n == o).all())
-        for n, o in zip(outs_naive, outs_merged)) / NUM_REQ
+        for n, o in zip(outs_naive, outs_merged)) / n_req
     results["speedup_vs_naive"] = t_naive / t_engine
     emit("serve/summary", 0.0,
          f"speedup_vs_naive={results['speedup_vs_naive']:.2f}x "
-         f"exact_match={match}/{NUM_REQ}")
+         f"exact_match={match}/{n_req}")
 
 
 def _paged_vs_dense(results, cfg, key, params, adapters, quick):
     """Ragged traffic at equal batch: 1 long + 7 short prompts. The dense
     ring pays max_seq on every row; the pool pays for written tokens."""
+    n_req = 4 if quick else NUM_REQ
     ps = 8
     long_len = 32 if quick else 64
     short_len = 8 if quick else 16
     steps = 4 if quick else 8
     max_seq = long_len + steps
-    lens = [long_len] + [short_len] * (NUM_REQ - 1)
+    lens = [long_len] + [short_len] * (n_req - 1)
     prompts = [np.asarray(jax.random.randint(
         jax.random.fold_in(key, 40 + i), (lens[i],), 3, cfg.vocab_size))
-        for i in range(NUM_REQ)]
-    total_tok = sum(lens) + NUM_REQ * steps
+        for i in range(n_req)]
+    total_tok = sum(lens) + n_req * steps
     # pool sized to traffic demand, not to worst case
     num_pages = sum(-(-(li + steps) // ps) for li in lens)
 
@@ -164,13 +174,13 @@ def _paged_vs_dense(results, cfg, key, params, adapters, quick):
                      ("paged", {"page_size": ps, "num_pages": num_pages,
                                 "prefill_chunk": 16})):
         engine = ServeEngine(params, cfg, _registry(cfg, adapters),
-                             max_batch=NUM_REQ, max_seq=max_seq,
+                             max_batch=n_req, max_seq=max_seq,
                              kv_mode=mode, **kw)
 
         def wave():
             uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
                                   max_new_tokens=steps)
-                    for i in range(NUM_REQ)]
+                    for i in range(n_req)]
             t0 = time.time()
             done = engine.run()
             return time.time() - t0, [done[u] for u in uids]
@@ -191,11 +201,11 @@ def _paged_vs_dense(results, cfg, key, params, adapters, quick):
 
     merged = [merged_greedy(params, cfg, prompts[i],
                             adapters[f"client{i % len(RANKS)}"], steps)
-              for i in range(NUM_REQ)]
+              for i in range(n_req)]
     for mode in ("dense", "paged"):
         results[f"{mode}_ragged_exact"] = sum(
             int((o == m).all()) for o, m in zip(outs[mode], merged)
-        ) / NUM_REQ
+        ) / n_req
     results["kv_memory_ratio_dense_over_paged"] = \
         results["dense_kv_bytes"] / results["paged_kv_bytes"]
     emit("serve/paged_vs_dense", 0.0,
@@ -242,12 +252,97 @@ def _prefill(results, cfg, key, params, adapters, quick):
          f"({results['prefill_speedup']:.1f}x, expect >=3x)")
 
 
+def _speculative(results, cfg, key, params, adapters, quick):
+    """Draft–verify vs plain paged decode on the same traffic. The
+    forced-accept drafter scripts the true continuation (acceptance 1 —
+    the dispatch-amortization ceiling); the n-gram drafter pays nothing
+    and wins whatever the traffic's self-similarity gives it. Both must
+    reproduce plain decode byte-for-byte (lossless by construction)."""
+    n_req = 4 if quick else NUM_REQ
+    steps = 12 if quick else 48   # long decode: the dispatch-count win
+    spec_k = 4                    # is the thing under measurement
+    prompt_len = 8
+    # repetitive prompts (period 4) so the n-gram drafter has signal —
+    # templated traffic is exactly its use case
+    base = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 21), (n_req, 4), 3, cfg.vocab_size))
+    prompts = np.tile(base, (1, prompt_len // 4))
+    total_tok = n_req * steps
+
+    def wave(drafter):
+        engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                             max_batch=n_req,
+                             max_seq=prompt_len + steps, page_size=8,
+                             prefill_chunk=prompt_len, drafter=drafter,
+                             spec_k=spec_k)
+
+        def once():
+            uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
+                                  max_new_tokens=steps)
+                    for i in range(n_req)]
+            if isinstance(drafter, ScriptedDrafter):
+                for u, cont in zip(uids, results["_spec_plain_outs"]):
+                    drafter.set(u, cont)
+            t0 = time.time()
+            outs = engine.run()
+            return time.time() - t0, [outs[u] for u in uids]
+
+        t, outs = once()         # warmup: trace + compile
+        if drafter is None:      # plain baseline feeds the scripts
+            results["_spec_plain_outs"] = outs
+        # Stats snapshot per *timed* wave: the engine counters
+        # accumulate across waves, and the traffic is deterministic, so
+        # one wave's delta describes every timed rep below.
+        before = (engine.drafted_tokens, engine.accepted_tokens,
+                  engine.rollback_pages)
+        t, outs = once()
+        stats = {
+            "drafted": engine.drafted_tokens - before[0],
+            "accepted": engine.accepted_tokens - before[1],
+            "rollback_pages": engine.rollback_pages - before[2]}
+        stats["acceptance_rate"] = stats["accepted"] \
+            / max(stats["drafted"], 1)
+        # best-of-3: waves are short; take the least-disturbed timing
+        reps = [t] + [once()[0] for _ in range(2)]
+        return min(reps), outs, stats
+
+    t_plain, outs_plain, _ = wave(None)
+    results["spec_plain_tok_per_s"] = total_tok / t_plain
+
+    t_forced, outs_forced, stats = wave(ScriptedDrafter())
+    results["spec_forced_tok_per_s"] = total_tok / t_forced
+    results["spec_forced_acceptance"] = stats["acceptance_rate"]
+    results["spec_forced_speedup_vs_plain"] = t_plain / t_forced
+    results["spec_forced_exact"] = sum(
+        int((a == b).all())
+        for a, b in zip(outs_forced, outs_plain)) / n_req
+    results["spec_forced_rollback_pages"] = stats["rollback_pages"]
+
+    t_ng, outs_ng, stats = wave(NGramDrafter(2))
+    results["spec_ngram_tok_per_s"] = total_tok / t_ng
+    results["spec_ngram_acceptance"] = stats["acceptance_rate"]
+    results["spec_ngram_speedup_vs_plain"] = t_plain / t_ng
+    results["spec_ngram_exact"] = sum(
+        int((a == b).all())
+        for a, b in zip(outs_ng, outs_plain)) / n_req
+    results["spec_ngram_rollback_pages"] = stats["rollback_pages"]
+    del results["_spec_plain_outs"]
+    emit("serve/speculative", t_forced * 1e6 / total_tok,
+         f"forced-accept {results['spec_forced_tok_per_s']:.0f} tok/s "
+         f"({results['spec_forced_speedup_vs_plain']:.2f}x plain, expect "
+         f">=1.5x), ngram {results['spec_ngram_speedup_vs_plain']:.2f}x "
+         f"at acceptance {results['spec_ngram_acceptance']:.2f}, "
+         f"exact={results['spec_forced_exact']:.2f}/"
+         f"{results['spec_ngram_exact']:.2f}")
+
+
 def run(quick=False):
     cfg, key, params, adapters = _setup()
     results = {}
     _throughput_wave(results, cfg, key, params, adapters, quick)
     _paged_vs_dense(results, cfg, key, params, adapters, quick)
     _prefill(results, cfg, key, params, adapters, quick)
+    _speculative(results, cfg, key, params, adapters, quick)
     return results
 
 

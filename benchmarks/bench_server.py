@@ -54,7 +54,7 @@ def _tree_rel_error(got, ref, alpha) -> float:
 
 
 def run(quick=False):
-    layers = 6 if quick else 24
+    layers = 2 if quick else 24
     key = jax.random.PRNGKey(0)
     st = _stacked(key, layers=layers)
     eta = jnp.ones((st["A"].shape[0],))

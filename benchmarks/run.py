@@ -18,6 +18,11 @@ clobbering them (its error lands under ``"_errors"``). Sections not
 re-run this invocation keep their previous numbers. The json write is
 atomic (tmp + rename), so an interrupt never leaves a half-written file.
 
+``--quick`` is a smoke mode: every section at tiny shapes in ~1-2 min
+total (tier-1 runs it, so benchmark scripts cannot silently rot). Its
+numbers are pipeline checks, not magnitudes, so it defaults to a
+separate ``results/bench_quick.json`` instead of the canonical file.
+
   PYTHONPATH=src python -m benchmarks.run [--only svd,comm] [--quick]
 """
 from __future__ import annotations
@@ -103,6 +108,13 @@ def main(argv=None) -> int:
     ap.add_argument("--dryrun-jsonl", default="results/dryrun.jsonl")
     ap.add_argument("--out", default="results/bench_results.json")
     args = ap.parse_args(argv)
+    if args.quick and args.out == ap.get_default("out"):
+        # quick is a smoke mode (tiny shapes, meaningless magnitudes):
+        # never let it silently merge over the canonical numbers. An
+        # explicit --out still wins.
+        args.out = "results/bench_quick.json"
+        print(f"[benchmarks] --quick: writing {args.out} (pass --out to "
+              f"override; the canonical json is full-run only)")
     if args.only == "all":
         which = ALL
     else:

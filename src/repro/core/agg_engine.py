@@ -36,6 +36,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import svd as svd_lib
 
@@ -44,6 +45,24 @@ StackedAdapter = Dict[str, jax.Array]
 
 def _prod(xs) -> int:
     return int(math.prod(xs)) if xs else 1
+
+
+def rank_for_energy(spectrum, energy: float, r_min: int, r_max: int) -> int:
+    """Smallest rank whose leading singular directions capture ``energy``
+    of the spectrum's total σ² energy, clamped to [r_min, r_max].
+
+    ``spectrum``: (..., r) singular values — leading axes (layers,
+    targets stacked by the caller) are pooled by *mean energy* (σ²,
+    then cumulate), which is the seed's pooling order: squaring after
+    pooling weights dissimilar spectra differently and shifts the
+    cutoff. This is the one place the energy→rank rule lives; both the
+    per-client and the per-target policies in ``fed/server.py`` call
+    it, so they can never drift apart."""
+    s = np.asarray(spectrum, np.float64)
+    s2 = np.mean(s.reshape(-1, s.shape[-1]) ** 2, axis=0)
+    cum = np.cumsum(s2) / max(float(s2.sum()), 1e-30)
+    r = int(np.searchsorted(cum, energy) + 1)
+    return int(np.clip(r, r_min, r_max))
 
 
 # ---------------------------------------------------------------------------

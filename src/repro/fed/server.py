@@ -44,6 +44,12 @@ class ServerConfig:
     # ``spectrum_energy`` of it, clamped per-client by capacity.
     rank_policy: str = "random"
     spectrum_energy: float = 0.95
+    # Per-*target* refinement of the spectrum policy: each LoRA target
+    # (q, v, w1, ...) gets its own energy rank from its own spectrum —
+    # attention projections routinely concentrate in fewer directions
+    # than MLP ones, and one pooled rank overpays the tight targets.
+    # Redistribution then masks target t to min(r_client, r_target).
+    per_target_ranks: bool = False
     r_min: int = 2
     r_max: int = 8
     seed: int = 0
@@ -94,6 +100,9 @@ class FedServer:
         # Singular spectrum of the last aggregated ΔW' per target,
         # {target: (*stack, r_max)} — surfaced by the engine for free.
         self.last_spectrum: Optional[dict] = None
+        # Per-target rank caps ({target: r}) set by adapt_ranks when
+        # scfg.per_target_ranks; None until the first adaptation.
+        self.target_ranks: Optional[Dict[str, int]] = None
         self.rounds_done = 0
 
     # -- cohort handling ----------------------------------------------------
@@ -102,23 +111,32 @@ class FedServer:
         return self.rng.choice(self.scfg.num_clients,
                                size=self.scfg.clients_per_round, replace=False)
 
-    def _cohort_masks(self, cohort: np.ndarray, mask_shape) -> jnp.ndarray:
+    def _cohort_masks(self, cohort: np.ndarray, mask_shape,
+                      cap: Optional[int] = None) -> jnp.ndarray:
+        """Rank masks for the cohort; ``cap`` (per-target rank) clamps
+        every client's rank from above — SVD components are ordered, so
+        the first min(r_k, cap) directions are the optimal truncation."""
         r_max = self.cfg.lora.r_max
         k = len(cohort)
         masks = np.zeros((k, *mask_shape), np.float32)
         for i, cid in enumerate(cohort):
-            masks[i, ...] = (np.arange(r_max) < self.ranks[cid]).astype(np.float32)
+            r_k = int(self.ranks[cid]) if cap is None \
+                else min(int(self.ranks[cid]), int(cap))
+            masks[i, ...] = (np.arange(r_max) < r_k).astype(np.float32)
         return jnp.asarray(masks)
 
     def cohort_adapters(self, cohort: np.ndarray) -> Dict[str, dict]:
         """Broadcast step: per-client rank-r_k truncation of the global
-        adapter, with the r_k/r_max scale correction (hlora only — the
+        adapter (clamped per target when per-target ranks are adapted),
+        with the r_k/r_max scale correction (hlora only — the
         naive baseline distributes plain truncated factors, as in Cho)."""
         k = len(cohort)
         r_max = self.cfg.lora.r_max
         out = {}
         for t, ad in self.global_lora.items():
-            m = self._cohort_masks(cohort, ad["mask"].shape)
+            cap = None if self.target_ranks is None \
+                else self.target_ranks.get(t)
+            m = self._cohort_masks(cohort, ad["mask"].shape, cap)
             a = jnp.broadcast_to(ad["A"][None], (k, *ad["A"].shape)) * m[..., None, :]
             b = jnp.broadcast_to(ad["B"][None], (k, *ad["B"].shape)) * m[..., :, None]
             if self.scfg.strategy == "hlora":
@@ -167,36 +185,56 @@ class FedServer:
             self.adapt_ranks()
         self.rounds_done += 1
 
+    def _target_spectra(self) -> Dict[str, np.ndarray]:
+        """Per-target mean singular spectrum of the aggregated ΔW'.
+
+        Straight from the engine when available (it just ran the SVD, so
+        Σ is free). When no engine spectrum exists — e.g. a restored
+        server that has not aggregated yet — fall back to deriving it
+        from the stored factors, normalizing per split: under 'paper' B'
+        rows have norm σ, under 'sqrt' both factors carry √σ (so row
+        norms of B' are √σ and must be squared) — the same normalization
+        per target, so the per-target policy is split-invariant too."""
+        if self.last_spectrum is not None:
+            return {
+                t: np.asarray(s, np.float64).reshape(-1,
+                                                     s.shape[-1]).mean(0)
+                for t, s in self.last_spectrum.items()}
+        out = {}
+        for t, ad in self.global_lora.items():
+            b = np.asarray(jnp.linalg.norm(ad["B"], axis=-1))  # (L,r)|(r,)
+            s = b.reshape(-1, b.shape[-1]).mean(axis=0)
+            if self.scfg.split == "sqrt":
+                s = s ** 2          # row norms of B' are √σ under 'sqrt'
+            out[t] = s
+        return out
+
     def adapt_ranks(self) -> None:
         """Beyond-paper adaptive policy: read the singular spectrum of the
         aggregated ΔW' and pick the smallest rank capturing
-        ``spectrum_energy`` of it.
+        ``spectrum_energy`` of it (``agg_engine.rank_for_energy``).
 
-        The spectrum comes straight from the engine (it just ran the SVD,
-        so Σ is free). When no engine spectrum is available — e.g. a
-        restored server that has not aggregated yet — fall back to
-        deriving it from the stored factors, normalizing per split: under
-        'paper' B' rows have norm σ, under 'sqrt' both factors carry √σ
-        (so row norms of B' are √σ and must be squared)."""
-        if self.last_spectrum is not None:
-            sv = [np.asarray(s, np.float64).reshape(-1, s.shape[-1]).mean(0)
-                  for s in self.last_spectrum.values()]
-        else:
-            sv = []
-            for t, ad in self.global_lora.items():
-                b = np.asarray(jnp.linalg.norm(ad["B"], axis=-1))  # (L,r)|(r,)
-                s = b.reshape(-1, b.shape[-1]).mean(axis=0)
-                if self.scfg.split == "sqrt":
-                    s = s ** 2          # row norms of B' are √σ under 'sqrt'
-                sv.append(s)
-        # mean over targets of per-target energy (σ²) — squaring before
-        # pooling, as the seed did; pooling then squaring weights targets
-        # with dissimilar spectra differently and shifts the cutoff.
-        s2 = np.mean(np.stack(sv) ** 2, axis=0)
-        cum = np.cumsum(s2) / max(float(s2.sum()), 1e-30)
-        r_star = int(np.searchsorted(cum, self.scfg.spectrum_energy) + 1)
-        r_star = int(np.clip(r_star, self.scfg.r_min, self.scfg.r_max))
+        Per-client: one rank from the spectra pooled across targets
+        (mean σ² — squaring before pooling, as the seed did; pooling
+        then squaring weights targets with dissimilar spectra
+        differently and shifts the cutoff). With
+        ``scfg.per_target_ranks``, each target additionally gets its own
+        energy rank from its own spectrum; redistribution masks target t
+        to min(r_client, r_target), so a tight attention projection
+        stops paying for a fat MLP one."""
+        spectra = self._target_spectra()
+        e, lo, hi = (self.scfg.spectrum_energy, self.scfg.r_min,
+                     self.scfg.r_max)
+        # rank_for_energy pools leading axes by mean σ² itself — the
+        # stacked (T, r) spectra give exactly the mean-over-targets
+        # energy cutoff
+        r_star = agg_engine.rank_for_energy(
+            np.stack(list(spectra.values())), e, lo, hi)
         self.ranks = np.full((self.scfg.num_clients,), r_star, np.int32)
+        if self.scfg.per_target_ranks:
+            self.target_ranks = {
+                t: agg_engine.rank_for_energy(s, e, lo, hi)
+                for t, s in spectra.items()}
 
     def global_params(self):
         return {**self.base, **self.global_head, "lora": self.global_lora}

@@ -13,6 +13,7 @@ from repro.kernels.flash_attn import flash_attention as _flash
 from repro.kernels.lora_matmul import lora_matmul as _lora_matmul
 from repro.kernels.paged_attn import paged_attention as _paged_attn
 from repro.kernels.recon_agg import recon_agg as _recon_agg
+from repro.kernels.verify import paged_verify_attention as _paged_verify
 
 _ON_TPU = None
 
@@ -130,14 +131,20 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=None,
                     interpret: Optional[bool] = None, **blocks):
     """Batched flash attention: q (B,Sq,H,D), k/v (B,Skv,H,D).
 
-    ``q_offset`` (shared across the batch) places q[0] at an arbitrary
-    absolute kv position — the chunked-prefill contract; a traced scalar
-    does not retrace (scalar prefetch)."""
+    ``q_offset`` places q[0] at an arbitrary absolute kv position — the
+    chunked-prefill contract. A traced scalar (shared across the batch)
+    does not retrace (scalar prefetch); a (B,)-shaped array gives every
+    batch row its own offset (the multi-row speculative-window contract)
+    at the same single compilation, vmapped over the offset axis."""
     interpret = (not on_tpu()) if interpret is None else interpret
-    fn = lambda q_, k_, v_: _flash(q_, k_, v_, causal=causal, window=window,
-                                   q_offset=q_offset, interpret=interpret,
-                                   **blocks)
-    return jax.vmap(fn)(q, k, v)
+
+    def fn(q_, k_, v_, off):
+        return _flash(q_, k_, v_, causal=causal, window=window,
+                      q_offset=off, interpret=interpret, **blocks)
+
+    if q_offset is not None and jnp.ndim(q_offset) == 1:
+        return jax.vmap(fn)(q, k, v, jnp.asarray(q_offset, jnp.int32))
+    return jax.vmap(fn, in_axes=(0, 0, 0, None))(q, k, v, q_offset)
 
 
 def paged_attention(q, k_pool, v_pool, page_tables, lengths, *,
@@ -169,4 +176,39 @@ def paged_attention(q, k_pool, v_pool, page_tables, lengths, *,
     out = _paged_attn(qg, k_pool, v_pool, page_tables, lengths,
                       page_size=page_size, scale=scale, interpret=interpret)
     out = out.reshape(b, h, dhp)
+    return out[..., :dh] if dhp != dh else out
+
+
+def paged_verify_attention(q, k_pool, v_pool, page_tables, lengths,
+                           q_offsets, *, page_size: int,
+                           interpret: Optional[bool] = None):
+    """Speculative verify: q (B, Sq, H, Dh) — Sq draft-window tokens per
+    row, token i of row b at absolute position q_offsets[b] + i — against
+    the page-pooled KV (NP, page_size, Hkv, Dh) named by page_tables
+    (B, P), causal within each row's window and masked at lengths[b].
+
+    Pads Dh to the lane width and the slot axis to the sublane width,
+    groups q heads by KV head, and slices back — the same padding
+    contract as ``paged_attention``, which this generalizes (Sq = 1 with
+    q_offsets = lengths - 1 is plain decode)."""
+    interpret = (not on_tpu()) if interpret is None else interpret
+    b, sq, h, dh = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    groups = h // hkv
+    assert groups * hkv == h, (h, hkv)
+    scale = 1.0 / (dh ** 0.5)
+    dhp = _ceil_to(dh, 128)
+    psp = _ceil_to(ps, 8)
+    qg = q.reshape(b, sq, hkv, groups, dh)
+    if dhp != dh:
+        qg = _pad_axis(qg, 4, dhp)
+        k_pool = _pad_axis(k_pool, 3, dhp)
+        v_pool = _pad_axis(v_pool, 3, dhp)
+    if psp != ps:
+        k_pool = _pad_axis(k_pool, 1, psp)
+        v_pool = _pad_axis(v_pool, 1, psp)
+    out = _paged_verify(qg, k_pool, v_pool, page_tables, lengths,
+                        q_offsets, page_size=page_size, scale=scale,
+                        interpret=interpret)
+    out = out.reshape(b, sq, h, dhp)
     return out[..., :dh] if dhp != dh else out

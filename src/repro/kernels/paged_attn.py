@@ -25,9 +25,15 @@ length mask, as are the pool's padding slots when the logical
 
 Per-program VMEM: (G, Dh) q + 2·(page_size, Dh) kv + (G, page_size)
 logits + scratch — tiny; pages are deliberately small (16–64 tokens).
-Fully-masked pages still run their (G, page_size) matmul; rows much
-shorter than the longest admit some dead work.  Worth a `pl.when` skip
-once profiles demand it.
+Pages that sit entirely at-or-past ``lengths[b]`` are fully masked, so
+the kernel skips their body with ``pl.when`` on the SMEM-resident
+length — output-identical (a skipped page contributes exactly zero to
+the online softmax), and ragged batches stop paying the longest row's
+page walk on every row.
+
+The multi-query-token generalization (speculative verify: Sq positions
+per row with a per-row causal frontier) lives in ``kernels/verify.py``;
+this kernel stays specialized to the Sq = 1 decode hot path.
 """
 from __future__ import annotations
 
@@ -55,25 +61,33 @@ def _kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)             # (G, Dh)
-    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (block_s, Dh)
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # Pages at-or-past the row's length are fully masked: every slot
+    # they hold sits at a position >= lengths[b], so their softmax
+    # contribution is exactly zero. Skip the whole body (matmuls
+    # included) via the SMEM-resident length — rows much shorter than
+    # the longest in the batch stop paying for its page walk.
+    @pl.when(j * page_size < len_ref[b])
+    def _attend():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, Dh)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (block_s, Dh)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
 
-    slot = jax.lax.iota(jnp.int32, block_s)
-    # Logical position of slot s in page j is j*page_size + s; slots past
-    # the logical page_size are sublane padding, never valid.
-    valid = (slot < page_size) & (j * page_size + slot < len_ref[b])
-    s = jnp.where(valid[None, :], s, NEG_INF)
+        slot = jax.lax.iota(jnp.int32, block_s)
+        # Logical position of slot s in page j is j*page_size + s; slots
+        # past the logical page_size are sublane padding, never valid.
+        valid = (slot < page_size) & (j * page_size + slot < len_ref[b])
+        s = jnp.where(valid[None, :], s, NEG_INF)
 
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    p = jnp.exp(s - m_new)
-    alpha = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
-        p, v_ref[0, :, 0, :].astype(jnp.float32),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1,
+                                                  keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v_ref[0, :, 0, :].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
 
     @pl.when(j == pages_per_row - 1)
     def _finish():

@@ -66,6 +66,46 @@ def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_verify_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     page_tables: jax.Array, lengths: jax.Array,
+                     q_offsets: jax.Array) -> jax.Array:
+    """Gather-based multi-query-token paged attention oracle (and the
+    off-TPU path of the speculative verify step).
+
+    q: (B, Sq, H, Dh) — Sq speculative tokens per row, token ``i`` of row
+    ``b`` at absolute position ``q_offsets[b] + i``; k_pool/v_pool:
+    (num_pages, page_size, Hkv, Dh); page_tables: (B, P); lengths: (B,)
+    valid-token counts *including* the speculative window. kv positions
+    are implicit in the page table; token i attends causally to
+    positions <= q_offsets[b] + i (and < lengths[b]). Sq = 1 with
+    q_offsets = lengths - 1 is exactly ``paged_attention_ref``.
+    Returns (B, Sq, H, Dh); rows with lengths == 0 emit exact zeros."""
+    b, sq, h, dh = q.shape
+    _, ps, hkv, _ = k_pool.shape
+    p = page_tables.shape[1]
+    kk = k_pool[page_tables].reshape(b, p * ps, hkv, dh)
+    vv = v_pool[page_tables].reshape(b, p * ps, hkv, dh)
+    groups = h // hkv
+    if groups > 1:
+        kk = jnp.broadcast_to(kk[:, :, :, None, :],
+                              (b, p * ps, hkv, groups, dh)
+                              ).reshape(b, p * ps, h, dh)
+        vv = jnp.broadcast_to(vv[:, :, :, None, :],
+                              (b, p * ps, hkv, groups, dh)
+                              ).reshape(b, p * ps, h, dh)
+    scale = 1.0 / math.sqrt(dh)
+    logits = jnp.einsum("bqhd,bshd->bqhs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    kv_pos = jnp.arange(p * ps)[None, None, :]                # (1, 1, S)
+    qpos = q_offsets[:, None, None] + jnp.arange(sq)[None, :, None]
+    valid = (kv_pos < lengths[:, None, None]) & (kv_pos <= qpos)
+    logits = jnp.where(valid[:, :, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqhs,bshd->bqhd", probs, vv.astype(jnp.float32))
+    out = out * (lengths > 0)[:, None, None, None]
+    return out.astype(q.dtype)
+
+
 def flash_attention_ref(
     q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
     window: Optional[int] = None,

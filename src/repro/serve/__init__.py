@@ -14,7 +14,12 @@ path, in three layers:
                 pool (paged attention), and prompts prefill in chunks.
   pages.py    — PagedKV + PageAllocator: the global page pool, host
                 free-list, and fixed-shape page tables that let free
-                pages — not max_seq — gate admission.
+                pages — not max_seq — gate admission; ``truncate`` rolls
+                rejected speculative suffixes back into the free list.
+  spec.py     — drafters for lossless speculative decode (self-draft
+                layer subset, n-gram prompt lookup, scripted harness);
+                the engine's verify step scores all draft positions in
+                one dispatch (kernels/verify.py).
   oracle.py   — reference per-request decodes (factored + merged-weight)
                 the engine is pinned against, plus the shared demo-
                 adapter fixture.
@@ -42,5 +47,7 @@ step never retraces.
 from repro.serve.engine import ServeEngine
 from repro.serve.pages import PageAllocator, PagedKV
 from repro.serve.registry import AdapterRegistry
+from repro.serve.spec import NGramDrafter, ScriptedDrafter, SelfDrafter
 
-__all__ = ["AdapterRegistry", "PageAllocator", "PagedKV", "ServeEngine"]
+__all__ = ["AdapterRegistry", "NGramDrafter", "PageAllocator", "PagedKV",
+           "ScriptedDrafter", "SelfDrafter", "ServeEngine"]

@@ -28,9 +28,19 @@ scalar-prefetch SMEM on TPU), writing K/V straight into the row's pages
 per prompt *chunk* instead of per prompt token. Padded chunk tail tokens
 write to the pool's trash page.
 
+Decode can run **speculatively** (``drafter=...``): a drafter proposes
+up to ``spec_k`` tokens per row (``serve/spec.py``), a third jitted
+step scores all ``spec_k + 1`` positions in one dispatch through the
+multi-query-token paged read (``kernels/verify.py``), and each row
+commits the longest draft prefix that exactly matches the model's own
+greedy tokens plus the model's next token — lossless by construction,
+1 to ``spec_k + 1`` committed tokens per dispatch. Rejected suffixes
+roll their pages back via ``PagedKV.truncate``.
+
 Everything is value updates against fixed shapes — page tables, page
-extensions, admissions, hot-swaps — so ``trace_count`` stays flat at
-one trace per jitted step (decode + prefill) for the engine's lifetime.
+extensions, admissions, hot-swaps, speculative windows, rollbacks — so
+``trace_count`` stays flat at one trace per jitted step (decode +
+prefill + verify) for the engine's lifetime.
 
 ``kv_mode="dense"`` keeps the PR-2 dense ring cache as a fallback; its
 insert path *drops* writes past the ring instead of silently wrapping
@@ -193,6 +203,32 @@ def _layer_decode_paged(x, lp, slab, lc, idx, pos, lens, page, slot,
                                                               "v": lcv}
 
 
+def _layer_verify_paged(x, lp, slab, lc, idx, tpos, lens, page, slot,
+                        tables, pos0, cfg: ModelConfig, use_pallas: bool,
+                        page_size: int):
+    """A window of S speculative tokens per row through one layer.
+    x: (B, S, d); tpos: (B, S) absolute positions (pos0[b] + i);
+    page/slot: (B, S) write targets (invalid tail tokens and inactive
+    rows -> trash); tables: (B, P); lens: (B,) valid tokens *including*
+    the window (0 for inactive rows); pos0: (B,) window start — the
+    per-row causal frontier of the multi-token paged read."""
+    bsz, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    _, q, k, v = _layer_qkv(x, lp, slab, idx, tpos, cfg, use_pallas)
+    lck = lc["k"].at[page, slot].set(k)
+    lcv = lc["v"].at[page, slot].set(v)
+    if use_pallas:
+        from repro.kernels import ops
+        o = ops.paged_verify_attention(q, lck, lcv, tables, lens, pos0,
+                                       page_size=page_size)
+    else:
+        from repro.kernels import ref
+        o = ref.paged_verify_ref(q, lck, lcv, tables, lens, pos0)
+    o = o.reshape(bsz, s, cfg.num_heads * hd)
+    return _layer_out(x, o, lp, slab, idx, cfg, use_pallas), {"k": lck,
+                                                              "v": lcv}
+
+
 def _layer_prefill_paged(x, lp, slab, lc, idx, tpos, page, slot, table_row,
                          pos0, cfg: ModelConfig, use_pallas: bool,
                          page_size: int):
@@ -254,6 +290,7 @@ class ServeEngine:
                  kv_mode: str = "paged", page_size: int = 8,
                  num_pages: Optional[int] = None,
                  prefill_chunk: int = 16,
+                 drafter=None, spec_k: int = 4,
                  use_pallas: Optional[bool] = None,
                  cache_dtype=jnp.float32):
         if cfg.arch_type not in ("dense", "vlm"):
@@ -264,12 +301,21 @@ class ServeEngine:
             raise NotImplementedError("MoE serving not wired yet")
         if kv_mode not in ("paged", "dense"):
             raise ValueError(f"unknown kv_mode {kv_mode!r}")
+        if drafter is not None and kv_mode != "paged":
+            raise ValueError(
+                "speculative decode needs the paged KV cache (rollback "
+                "is a page-table operation); kv_mode='dense' has no "
+                "draft-verify path")
+        if drafter is not None and spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
         self.params = params
         self.cfg = cfg
         self.registry = registry
         self.max_batch = int(max_batch)
         self.max_seq = int(max_seq)
         self.kv_mode = kv_mode
+        self.drafter = drafter
+        self.spec_k = int(spec_k)
         if use_pallas is None:
             from repro.kernels import ops
             use_pallas = ops.on_tpu()
@@ -289,6 +335,7 @@ class ServeEngine:
             self.prefill_chunk = max(1, int(prefill_chunk))
             self._step = jax.jit(self._paged_step_impl)
             self._prefill = jax.jit(self._prefill_impl)
+            self._verify = jax.jit(self._verify_impl)
         else:
             self.cache = init_kv_cache(cfg.num_layers, self.max_batch,
                                        self.max_seq, cfg.num_kv_heads,
@@ -306,6 +353,15 @@ class ServeEngine:
         self.prefill_tokens = 0
         self.deferrals = 0
         self.preemptions = 0
+        # speculative-decode counters (stay 0 without a drafter)
+        self.spec_dispatches = 0
+        self.drafted_tokens = 0
+        self.accepted_tokens = 0
+        self.rollback_pages = 0
+        # distinct adapter slots among active rows at the last paged
+        # dispatch — rows are sorted/grouped by slot before the BGMV
+        # gather (the first move toward SGMV tile reuse)
+        self.bgmv_groups = 0
 
     # -- introspection ------------------------------------------------------
 
@@ -374,6 +430,46 @@ class ServeEngine:
                                 (params["layers"], slabs, pools))
         x = norm(x, params["final_norm"])
         return self._logits(params, x[:, 0, :]), new_pools
+
+    def _verify_impl(self, params, slabs, pools, tables, idx, tokens,
+                     pos0, nv):
+        """Speculative verify: score a window of S = spec_k + 1 tokens
+        per row (the context token + spec_k drafts) in one dispatch.
+        tokens: (B, S), pos0: (B,) window start (the position the
+        context token's KV lands in), nv: (B,) valid tokens in the
+        window (0 for inactive rows), tables: (B, P)
+        -> (logits (B, S, V), pools). Token i of row b sits at absolute
+        position pos0[b] + i; its K/V is written into the row's pages
+        first (tail tokens past nv -> trash), then all S positions
+        attend causally through the multi-token paged read
+        (kernels/verify.py on TPU, the gather oracle elsewhere)."""
+        self.trace_count += 1
+        ps = self.page_size
+        s = tokens.shape[1]
+        p = tables.shape[1]
+        tpos = pos0[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        x = self._embed(params, tokens, tpos)
+        # Write targets: beyond-window positions can step past the page
+        # table; clip, then let the nv mask (and the trash entries the
+        # allocator leaves in unallocated table slots) steer them away.
+        pageidx = jnp.minimum(tpos // ps, p - 1)
+        page = jnp.take_along_axis(tables, pageidx, axis=1)
+        page = jnp.where(jnp.arange(s)[None, :] < nv[:, None], page,
+                         self.kv.trash)
+        slot = tpos % ps
+        lens = jnp.where(nv > 0, pos0 + nv, 0)
+
+        def scan_body(carry, xs):
+            lp, slab_l, lc = xs
+            y, new_lc = _layer_verify_paged(
+                carry, lp, slab_l, lc, idx, tpos, lens, page, slot,
+                tables, pos0, self.cfg, self.use_pallas, ps)
+            return y, new_lc
+
+        x, new_pools = lax.scan(scan_body, x,
+                                (params["layers"], slabs, pools))
+        x = norm(x, params["final_norm"])
+        return self._logits(params, x), new_pools
 
     def _prefill_impl(self, params, slabs, pools, table_row, idx, tokens,
                       pos0, nvalid):
@@ -517,14 +613,24 @@ class ServeEngine:
         if len(req["out"]) >= req["max_new"]:
             self._finish(row, req)
 
-    def _ensure_pages(self) -> None:
-        """Every active row must own the page its next token lands in;
-        extend, preempting the youngest other rows when the pool is dry."""
+    def _spec_window(self, req: dict) -> int:
+        """Draft tokens worth verifying for this row: never more than the
+        request could still commit (a dispatch commits 1..k+1 tokens)."""
+        return min(self.spec_k, req["max_new"] - len(req["out"]) - 1)
+
+    def _ensure_pages(self, lookahead: Optional[Dict[int, int]] = None
+                      ) -> None:
+        """Every active row must own the page its next token lands in —
+        plus ``lookahead[row]`` further positions for a speculative
+        window — extending, and preempting the youngest other rows when
+        the pool is dry."""
+        lookahead = lookahead or {}
         for row in range(self.max_batch):
             req = self._rows[row]
             if req is None:
                 continue
-            needed = req["t"] // self.page_size + 1
+            needed = (req["t"] + lookahead.get(row, 0)) \
+                // self.page_size + 1
             if self.kv.allocated(row) >= needed:
                 continue
             grow = needed - self.kv.allocated(row)
@@ -543,11 +649,32 @@ class ServeEngine:
                         f"page accounting violated: row {row} cannot "
                         f"extend by {grow} page(s) after preemption")
 
+    def _slot_order(self, idx: np.ndarray, active_mask: np.ndarray):
+        """Stable permutation grouping batch rows by adapter slot
+        (inactive rows last) — applied to every per-row input of a paged
+        dispatch, so rows sharing an adapter sit adjacent for the BGMV
+        gather (the precondition for SGMV-style tile reuse). Host-side
+        values only: same shapes every step, nothing retraces. Returns
+        ``(perm, inv)`` — dispatch inputs take ``x[perm]``, outputs come
+        back via ``y[inv]`` — and records the distinct-slot count in
+        ``bgmv_groups``."""
+        key = np.where(active_mask, idx, np.iinfo(np.int32).max)
+        self.bgmv_groups = len(set(idx[active_mask].tolist()))
+        perm = np.argsort(key, kind="stable")
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.size)
+        return perm, inv
+
     def step_batch(self) -> None:
-        """Admit (+prefill), page, run one decode step, harvest/recycle."""
+        """Admit (+prefill), page, run one decode (or draft+verify)
+        step, harvest/recycle."""
         admitted = self._admit()
         if self.kv_mode == "paged":
-            self._ensure_pages()
+            look = None
+            if self.drafter is not None:
+                look = {i: self._spec_window(r)
+                        for i, r in enumerate(self._rows) if r is not None}
+            self._ensure_pages(look)
         active = [(i, r) for i, r in enumerate(self._rows) if r is not None]
         if not active:
             # admitted rows may have finished inside _admit (prefill +
@@ -567,6 +694,9 @@ class ServeEngine:
                     f"{len(self._queue)} queued requests but no adapter "
                     f"slot can be acquired and no row is active")
             return
+        if self.drafter is not None:
+            self._spec_dispatch(active)
+            return
         tokens = np.zeros((self.max_batch, 1), np.int32)
         pos = np.zeros((self.max_batch,), np.int32)
         idx = np.zeros((self.max_batch,), np.int32)
@@ -584,15 +714,18 @@ class ServeEngine:
             idx[i] = req["slot"]
             lens[i] = t + 1
         if self.kv_mode == "paged":
+            perm, inv = self._slot_order(idx, lens > 0)
             logits, self.kv.pools = self._step(
                 self.params, self.registry.slabs(), self.kv.pools,
-                self.kv.device_tables(), jnp.asarray(idx),
-                jnp.asarray(tokens), jnp.asarray(pos), jnp.asarray(lens))
+                jnp.asarray(self.kv.tables[perm]), jnp.asarray(idx[perm]),
+                jnp.asarray(tokens[perm]), jnp.asarray(pos[perm]),
+                jnp.asarray(lens[perm]))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)[inv]
         else:
             logits, self.cache = self._step(
                 self.params, self.registry.slabs(), self.cache,
                 jnp.asarray(idx), jnp.asarray(tokens), jnp.asarray(pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         self.steps += 1
         for i, req in active:
             req["t"] += 1
@@ -601,6 +734,73 @@ class ServeEngine:
                 self.tokens_generated += 1
             if len(req["out"]) >= req["max_new"]:    # finished: recycle row
                 self._finish(i, req)
+
+    def _spec_dispatch(self, active) -> None:
+        """One draft–verify round: the drafter proposes up to ``spec_k``
+        tokens per row, one verify dispatch scores every draft position
+        plus the model's own next token, and each row commits the
+        longest matching prefix + 1 (exact greedy token-match, so output
+        is guaranteed identical to plain decode). Rejected suffixes roll
+        back by truncating the row's page list — KV already written for
+        rejected positions dies by the length mask and is overwritten in
+        place when decode reaches those positions again."""
+        s = self.spec_k + 1
+        tokens = np.zeros((self.max_batch, s), np.int32)
+        pos0 = np.zeros((self.max_batch,), np.int32)
+        idx = np.zeros((self.max_batch,), np.int32)
+        nv = np.zeros((self.max_batch,), np.int32)
+        props = np.asarray(self.drafter.propose(self, active), np.int32)
+        if props.shape != (len(active), self.spec_k):
+            raise ValueError(
+                f"drafter proposed {props.shape}, expected "
+                f"{(len(active), self.spec_k)}")
+        for j, (i, req) in enumerate(active):
+            # paged rows join the batch past their prompt (prefill runs
+            # at admission), so the context token is always a sample
+            k_b = self._spec_window(req)
+            tokens[i, 0] = req["out"][-1]
+            tokens[i, 1:1 + k_b] = props[j, :k_b]
+            nv[i] = k_b + 1
+            pos0[i] = req["t"]
+            idx[i] = req["slot"]
+        perm, inv = self._slot_order(idx, nv > 0)
+        logits, self.kv.pools = self._verify(
+            self.params, self.registry.slabs(), self.kv.pools,
+            jnp.asarray(self.kv.tables[perm]), jnp.asarray(idx[perm]),
+            jnp.asarray(tokens[perm]), jnp.asarray(pos0[perm]),
+            jnp.asarray(nv[perm]))
+        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)[inv]
+        self.steps += 1
+        self.spec_dispatches += 1
+        for i, req in active:
+            k_b = int(nv[i]) - 1
+            accepted = 0
+            while accepted < k_b and \
+                    tokens[i, 1 + accepted] == greedy[i, accepted]:
+                accepted += 1
+            commit = accepted + 1     # matched drafts + the model's own
+            req["out"].extend(int(x) for x in greedy[i, :commit])
+            req["t"] += commit
+            self.tokens_generated += commit
+            self.drafted_tokens += k_b
+            self.accepted_tokens += accepted
+            if len(req["out"]) >= req["max_new"]:
+                self._finish(i, req)
+            else:
+                # rollback: pages past the next write position go home
+                self.rollback_pages += self.kv.truncate(i, req["t"])
+
+    def spec_stats(self) -> Dict[str, float]:
+        """Speculative-decode introspection (all zeros without a
+        drafter)."""
+        return {
+            "dispatches": self.spec_dispatches,
+            "drafted": self.drafted_tokens,
+            "accepted": self.accepted_tokens,
+            "acceptance_rate": self.accepted_tokens
+            / max(self.drafted_tokens, 1),
+            "rollback_pages": self.rollback_pages,
+        }
 
     def run(self) -> Dict[str, np.ndarray]:
         """Drive until every submitted request has finished."""

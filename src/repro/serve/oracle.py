@@ -89,3 +89,12 @@ def merged_greedy(params, cfg: ModelConfig, prompt, tree, steps: int
     """Per-request merge-then-decode (the deployment-merge oracle)."""
     merged = merge_adapter(params, cfg, tree)
     return factored_greedy(merged, cfg, prompt, merged["lora"], steps)
+
+
+def greedy_continuations(params, cfg: ModelConfig, prompts, trees,
+                         steps: int):
+    """The true greedy continuation of each request, via the merged
+    oracle — what a forced-accept drafter scripts and what every serving
+    path (plain, paged, speculative) must reproduce byte-for-byte."""
+    return [merged_greedy(params, cfg, p, tr, steps)
+            for p, tr in zip(prompts, trees)]

@@ -30,7 +30,9 @@ steps and the Pallas kernel rely on:
 
 **Allocator** — a host-side free list over page ids with per-owner
 bookkeeping: ``alloc`` (admission), ``extend`` (a decode crossing a page
-boundary), ``free`` (finish/preempt).  A page is never owned twice;
+boundary), ``truncate`` (speculative-decode rollback returning a
+rejected suffix's pages), ``free`` (finish/preempt).  A page is never
+owned twice;
 ``pin`` protects an in-flight owner from being chosen as a preemption
 victim while the scheduler reclaims pages on its behalf.  All of this is
 pure Python over ints: admission, extension, and eviction mutate *values*
@@ -109,6 +111,25 @@ class PageAllocator:
         self._pinned.discard(owner)
         self._free.extend(pages)
         return pages
+
+    def truncate(self, owner: Hashable, keep: int) -> List[int]:
+        """Shrink a live owner to its first ``keep`` pages, returning the
+        freed suffix to the pool (speculative-decode rollback: a rejected
+        draft suffix gives back the pages it no longer reaches). The owner
+        stays live — its admission order, pin state, and surviving pages
+        are untouched — and ``keep >= held`` is a no-op, so callers can
+        truncate unconditionally after every verify step."""
+        if owner not in self._owned:
+            raise KeyError(f"unknown owner {owner!r}")
+        if keep < 0:
+            raise ValueError(f"negative keep {keep}")
+        pages = self._owned[owner]
+        if keep >= len(pages):
+            return []
+        freed = pages[keep:]
+        del pages[keep:]
+        self._free.extend(freed)
+        return freed
 
     # -- pinning / preemption -----------------------------------------------
 
@@ -209,6 +230,22 @@ class PagedKV:
     def release(self, row: int) -> None:
         self.allocator.free(row)
         self.tables[row, :] = self.trash
+
+    def truncate(self, row: int, new_len: int) -> int:
+        """Roll a row back to ``new_len`` valid tokens, freeing every page
+        past the one its *next* write lands in (``new_len // page_size``).
+        Freed table entries flip back to trash, so stale KV in returned
+        pages can never be read through this row again; stale slots inside
+        the kept pages are dead by the length mask and are overwritten in
+        place as decode proceeds. Returns the number of pages freed."""
+        if new_len < 0:
+            raise ValueError(f"negative length {new_len}")
+        keep = min(new_len // self.page_size + 1,
+                   len(self.allocator.pages_of(row)))
+        freed = self.allocator.truncate(row, keep)
+        if freed:
+            self.tables[row, keep:keep + len(freed)] = self.trash
+        return len(freed)
 
     def allocated(self, row: int) -> int:
         return len(self.allocator.pages_of(row))

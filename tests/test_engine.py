@@ -404,6 +404,81 @@ def test_adapt_ranks_pools_energy_not_sigma():
     assert int(server.ranks[0]) == expected, (server.ranks[0], expected)
 
 
+def test_per_target_ranks_from_engine_spectrum():
+    """per_target_ranks gives each LoRA target its own energy rank from
+    its own spectrum; redistribution clamps the cohort masks to
+    min(r_client, r_target)."""
+    from repro.configs import get_reduced
+    from repro.fed import FedServer, ServerConfig
+    from repro.fed.simulation import SimConfig, pretrain_backbone
+    cfg = get_reduced("roberta-large")
+    base = pretrain_backbone(cfg, SimConfig(num_examples=256,
+                                            pretrain_steps=0, seed=0))
+    scfg = ServerConfig(num_clients=6, clients_per_round=3,
+                        strategy="hlora", rank_policy="spectrum",
+                        per_target_ranks=True, r_min=2, r_max=8, seed=0)
+    server = FedServer(cfg, scfg, base, client_sizes=np.full(6, 32),
+                       engine=agg_engine.AggregationEngine(
+                           use_pallas=False))
+    spec_q = np.array([10.0, 9.0, 1e-4, 1e-4, 1e-4, 1e-4, 1e-4, 1e-4])
+    spec_v = np.array([4.0, 4.0, 4.0, 4.0, 4.0, 4.0, 1e-4, 1e-4])
+    server.last_spectrum = {"q": jnp.asarray(np.tile(spec_q, (2, 1))),
+                            "v": jnp.asarray(np.tile(spec_v, (2, 1)))}
+    server.adapt_ranks()
+    assert server.target_ranks == {
+        "q": agg_engine.rank_for_energy(spec_q, 0.95, 2, 8),
+        "v": agg_engine.rank_for_energy(spec_v, 0.95, 2, 8)}
+    assert server.target_ranks["q"] < server.target_ranks["v"]
+    # the pooled per-client rank is unchanged by the per-target policy
+    s2 = (spec_q ** 2 + spec_v ** 2) / 2
+    cum = np.cumsum(s2) / s2.sum()
+    expected = int(np.clip(np.searchsorted(cum, 0.95) + 1, 2, 8))
+    assert int(server.ranks[0]) == expected
+    # broadcast masks are clamped per target
+    cohort = np.array([0, 2, 4])
+    stacked = server.cohort_adapters(cohort)
+    for t, cap in server.target_ranks.items():
+        r_eff = np.asarray(stacked[t]["mask"]).sum(-1)
+        want = min(cap, int(server.ranks[0]))
+        assert (r_eff == want).all(), (t, r_eff, want)
+
+
+def test_per_target_ranks_fallback_split_invariant():
+    """Regression on the 'sqrt' split: the factor-norm fallback must
+    normalize per split *per target* too — otherwise a restored server
+    on 'sqrt' picks different per-target ranks than on 'paper' for the
+    identical planted ΔW' spectrum."""
+    from repro.configs import get_reduced
+    from repro.fed import FedServer, ServerConfig
+    from repro.fed.simulation import SimConfig, pretrain_backbone
+    cfg = get_reduced("roberta-large")
+    base = pretrain_backbone(cfg, SimConfig(num_examples=256,
+                                            pretrain_steps=0, seed=0))
+    s_by_target = {"q": np.array([8.0, 4.0] + [1e-3] * 6),
+                   "v": np.array([5.0, 4.0, 3.0, 2.0] + [1e-3] * 4)}
+    picked = {}
+    for split in ("paper", "sqrt"):
+        scfg = ServerConfig(num_clients=6, clients_per_round=3,
+                            strategy="hlora", rank_policy="spectrum",
+                            per_target_ranks=True, split=split,
+                            r_min=2, r_max=8, seed=0)
+        server = FedServer(cfg, scfg, base, client_sizes=np.full(6, 32),
+                           engine=agg_engine.AggregationEngine(
+                               use_pallas=False))
+        server.last_spectrum = None
+        for t, ad in server.global_lora.items():
+            s = s_by_target[t]
+            rows = s if split == "paper" else np.sqrt(s)
+            b = np.zeros(np.asarray(ad["B"]).shape, np.float32)
+            b[..., 0] = rows
+            server.global_lora[t]["B"] = jnp.asarray(b)
+        server.adapt_ranks()
+        picked[split] = dict(server.target_ranks)
+    assert picked["paper"] == picked["sqrt"], picked
+    assert picked["paper"]["q"] == 2
+    assert picked["paper"]["v"] == 4
+
+
 def test_adapt_ranks_fallback_normalizes_per_split():
     """Without an engine spectrum (e.g. restored server), the factor-norm
     fallback must square the √σ row norms under 'sqrt'."""

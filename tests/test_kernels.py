@@ -80,6 +80,26 @@ def test_flash_matches_model_attention():
                                rtol=2e-4, atol=2e-4)
 
 
+def test_flash_attention_per_row_q_offset():
+    """ops.flash_attention with a (B,) q_offset gives every batch row its
+    own absolute position — each row must match the single-row kernel at
+    its scalar offset (the multi-row speculative-window contract)."""
+    from repro.models.common import attention
+    ks = jax.random.split(KEY, 3)
+    b, sq, skv, h, d = 3, 8, 64, 2, 32
+    q = jax.random.normal(ks[0], (b, sq, h, d))
+    k = jax.random.normal(ks[1], (b, skv, h, d))
+    v = jax.random.normal(ks[2], (b, skv, h, d))
+    offs = np.asarray([0, 17, skv - sq], np.int32)
+    got = ops.flash_attention(q, k, v, causal=True, q_offset=offs,
+                              block_q=8, block_k=8)
+    for i in range(b):
+        want = attention(q[i:i + 1], k[i:i + 1], v[i:i + 1], causal=True,
+                         q_offset=int(offs[i]))
+        np.testing.assert_allclose(np.asarray(got[i:i + 1]),
+                                   np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
 def test_ops_shape_padding_odd_lora_matmul():
     """Wrappers must pad non-MXU-aligned (M, K, N) and slice back — the
     raw kernel hard-asserts block divisibility (192 % 128 != 0 etc.)."""

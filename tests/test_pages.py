@@ -30,14 +30,27 @@ KEY = jax.random.PRNGKey(0)
 @given(num_pages=st.integers(min_value=1, max_value=24),
        seed=st.integers(min_value=0, max_value=10_000))
 def test_allocator_random_walk_conserves_pages(num_pages, seed):
-    """A random alloc/extend/free walk never loses or duplicates a page,
-    and every failure leaves the allocator bit-identical."""
+    """A random alloc/extend/truncate/free walk never loses or
+    duplicates a page, and every failure leaves the allocator
+    bit-identical."""
     rng = np.random.RandomState(seed)
     alloc = PageAllocator(num_pages)
     live = set()
-    for step in range(40):
-        op = rng.randint(3)
-        if op == 0:
+    for step in range(60):
+        op = rng.randint(4)
+        if op == 3 and live:
+            # speculative rollback: keep a random prefix, the freed
+            # suffix must land back in the free list
+            owner = sorted(live)[rng.randint(len(live))]
+            held = list(alloc.pages_of(owner))
+            keep = int(rng.randint(0, len(held) + 2))
+            before_free = alloc.free_count
+            freed = alloc.truncate(owner, keep)
+            assert alloc.pages_of(owner) == held[:keep]
+            assert freed == held[keep:]
+            assert alloc.free_count == before_free + len(freed)
+            assert owner in alloc.owners()        # rollback != teardown
+        elif op == 0:
             owner = f"o{step}"
             n = int(rng.randint(0, num_pages + 2))
             before = alloc.free_count
@@ -111,6 +124,49 @@ def test_allocator_rejects_double_alloc_and_unknown_owner():
     with pytest.raises(KeyError):
         alloc.pin("ghost")
     assert alloc.free("ghost") == []    # free is idempotent by design
+
+
+def test_allocator_truncate_keeps_pins_and_rejects_unknown():
+    """Rollback must not disturb pin protection (the row being rolled
+    back may be the one the scheduler is reclaiming *for*), and pinned
+    owners' surviving pages stay out of the victim scan."""
+    alloc = PageAllocator(8)
+    alloc.alloc("a", 4)
+    alloc.alloc("b", 4)
+    alloc.pin("a")
+    freed = alloc.truncate("a", 1)
+    assert len(freed) == 3 and alloc.pinned("a")
+    assert alloc.victims(4) == ["b"]      # pinned "a" never offered
+    assert alloc.truncate("a", 99) == []  # keep >= held: no-op
+    with pytest.raises(KeyError):
+        alloc.truncate("ghost", 0)
+    with pytest.raises(ValueError):
+        alloc.truncate("a", -1)
+    alloc.check()
+
+
+def test_paged_kv_truncate_frees_suffix_and_trashes_table():
+    """PagedKV.truncate keeps the page the next write lands in, frees
+    the rest, and re-trashes their table entries so stale KV can never
+    be read through this row again."""
+    kv = PagedKV(num_layers=1, num_pages=8, page_size=4,
+                 max_pages_per_row=4, max_batch=2, kv_heads=1, head_dim=8)
+    assert kv.admit(0, 4)                       # covers 16 tokens
+    pages = list(kv.allocator.pages_of(0))
+    # roll back to 5 valid tokens: next write is position 5 -> page 1,
+    # so pages 2..3 go home
+    assert kv.truncate(0, 5) == 2
+    assert kv.allocator.pages_of(0) == pages[:2]
+    np.testing.assert_array_equal(kv.tables[0],
+                                  pages[:2] + [kv.trash, kv.trash])
+    assert kv.allocator.free_count == 8 - 2
+    assert kv.truncate(0, 5) == 0               # idempotent
+    # boundary: 8 valid tokens -> next write opens page 2, keep 3 pages
+    kv.release(0)
+    assert kv.admit(0, 4)
+    assert kv.truncate(0, 8) == 1
+    assert len(kv.allocator.pages_of(0)) == 3
+    kv.allocator.check()
 
 
 def test_allocator_free_unpins():

@@ -292,6 +292,26 @@ def test_paged_engine_pallas_kernels_interpret(setup):
     np.testing.assert_array_equal(outs[uid], want)
 
 
+def test_rows_grouped_by_adapter_slot(setup):
+    """Paged dispatches sort batch rows by adapter slot before the BGMV
+    gather (the SGMV precondition) — a host-side permutation, so greedy
+    tokens are unchanged and the distinct-slot count is surfaced."""
+    cfg, params, adapters, prompts = setup
+    engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                         max_batch=8, max_seq=PROMPT_LEN + STEPS)
+    uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
+                          max_new_tokens=STEPS) for i in range(8)]
+    outs = engine.run()
+    # equal-length requests: the last decode dispatch still had all 8
+    # rows active across the 4 distinct adapters
+    assert engine.bgmv_groups == len(RANKS)
+    assert engine.trace_count == PAGED_TRACES    # sorting never retraces
+    for i, uid in enumerate(uids):
+        want = merged_greedy(params, cfg, prompts[i],
+                             adapters[f"client{i % len(RANKS)}"], STEPS)
+        np.testing.assert_array_equal(outs[uid], want)
+
+
 # ---------------------------------------------------------------------------
 # Dense-ring fallback regression (the PR-3 satellite bugfix)
 # ---------------------------------------------------------------------------

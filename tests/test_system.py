@@ -98,6 +98,30 @@ def test_fed_lora_deployable_merge(setup):
                                rtol=2e-3, atol=2e-3)
 
 
+def test_bench_quick_smoke_all_sections(tmp_path):
+    """Tier-1 guard against benchmark rot: ``benchmarks.run --quick``
+    must execute EVERY section end-to-end on tiny shapes and land a
+    number for each in the results json. This is what catches an API
+    drift in a benchmark script before it silently stops producing the
+    paper's tables."""
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import ALL, main
+    out = str(tmp_path / "bench.json")
+    rc = main(["--quick", "--out", out,
+               "--dryrun-jsonl", str(tmp_path / "missing.jsonl")])
+    got = json.load(open(out))
+    assert rc == 0, got.get("_errors")
+    assert set(ALL) <= set(got), sorted(set(ALL) - set(got))
+    # the speculative serving section reports the new metrics; the
+    # exactness/acceptance asserts are deterministic — the speedup is
+    # wall-clock on a noisy box, so only its presence is tier-1
+    assert got["serve"]["spec_forced_exact"] == 1.0
+    assert got["serve"]["spec_forced_acceptance"] == 1.0
+    assert got["serve"]["spec_forced_speedup_vs_plain"] > 0
+
+
 def test_bench_merge_preserves_sections_on_failure(tmp_path):
     """A failing bench section must not clobber its previous good numbers
     (they stay, the error lands under '_errors'), a succeeding section
