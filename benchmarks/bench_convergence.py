@@ -3,11 +3,16 @@ task stand-ins, multi-seed. One set of runs feeds both outputs:
 
   Fig. 3a/c/e — naive vs HLoRA (homogeneous rank): convergence curves
   Fig. 3b/d/f — HLoRA homogeneous vs heterogeneous rank
-  Table 1     — final accuracy per strategy per task
+  Table 1     — final accuracy per strategy per task (+ the beyond-paper
+                FLoRA stacking baseline, a one-class strategy addition)
 
 Paper claims validated: C1 (hlora ≥ naive in convergence/final acc),
 C2 (hetero ranks competitive/better despite smaller average rank),
 C3 (centralized is the upper bound).
+
+Each run is a thin driver over the unified FedSession API
+(``run_experiment`` = FedSession + SyncRound); strategy rows are
+resolved to AggregationStrategy objects by name.
 """
 from __future__ import annotations
 
@@ -28,6 +33,7 @@ STRATEGIES = [
     ("hlora", "uniform", "Reconstruction Re-Decomposition (Homogeneous)"),
     ("naive", "uniform", "Direct Application of LoRA (Naive)"),
     ("naive", "random", "Zero-Padding Heterogeneous (Cho et al.)"),
+    ("flora", "random", "FLoRA Stacking Heterogeneous (Wang et al.)"),
 ]
 
 
@@ -61,7 +67,9 @@ def run(tasks=("mrpc", "rte", "qqp"), seeds=(0, 1), rounds=14,
                         clients_per_round=4 if quick else 10,
                         strategy=strat, rank_policy=policy,
                         r_min=2, r_max=8, seed=seed)
-                    h = run_experiment(cfg, sim, scfg, base_params=base)
+                    # curves only — bench_fed owns the wire-byte numbers
+                    h = run_experiment(cfg, sim, scfg, base_params=base,
+                                       track_comm=False)
                 curves.append(h["eval_acc"])
             mean_curve = np.mean(np.array(curves), axis=0)
             key = f"{task}/{label}"

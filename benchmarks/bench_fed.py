@@ -1,0 +1,128 @@
+"""Federated orchestration benchmark: the three FedSession schedulers
+(sync / semi-sync / buffered-async) on one tiny convergence task, with
+*measured* wire bytes per round from the serialized message format.
+
+This is the tier-1 guard for the orchestration layer (registered as the
+``fed`` section of ``benchmarks/run.py``): if a scheduler, the strategy
+dispatch, or the wire accounting rots, ``--quick`` stops producing these
+numbers and ``test_system::test_bench_quick_smoke_all_sections`` fails.
+
+Reported per scheduler: final eval accuracy, events/rounds executed, and
+measured downlink/uplink bytes per round — plus the rank-truncation check
+(heterogeneous downlink < homogeneous r_max downlink, on serialized
+bytes, not a formula).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_reduced
+from repro.fed import (AsyncConfig, BufferedAsync, FedSession, SemiSync,
+                       ServerConfig, SimConfig, SyncRound)
+from repro.fed.simulation import make_experiment_setup, pretrain_backbone
+
+
+def _scfg(quick: bool, **kw) -> ServerConfig:
+    base = dict(num_clients=6 if quick else 20,
+                clients_per_round=3 if quick else 8,
+                strategy="hlora", rank_policy="random",
+                r_min=2, r_max=8, seed=0)
+    base.update(kw)
+    return ServerConfig(**base)
+
+
+def run(quick: bool = False) -> Dict:
+    cfg = get_reduced("roberta-large")
+    sim = SimConfig(task="mrpc",
+                    num_examples=256 if quick else 2048,
+                    eval_examples=64 if quick else 512,
+                    rounds=2 if quick else 8,
+                    local_steps=2 if quick else 6,
+                    local_batch=8 if quick else 16,
+                    pretrain_steps=10 if quick else 150,
+                    dirichlet_alpha=0.5, lr=1e-3, seed=0)
+    scfg = _scfg(quick)
+    base = pretrain_backbone(cfg, sim)
+    (kw, cohort_train, local_train, data_fn, client_data_fn,
+     eval_fn) = make_experiment_setup(cfg, sim, scfg, base)
+    n = scfg.num_clients
+    speeds = np.linspace(0.5, 2.0, n)          # 4x speed spread
+    out: Dict = {}
+
+    def _record(name, history, t0):
+        rounds = len(history.get("round", history.get("time", [])))
+        out[f"{name}_final_acc"] = history["eval_acc"][-1]
+        if "downlink_bytes" in history:
+            out[f"{name}_downlink_bytes_per_round"] = float(
+                np.mean(history["downlink_bytes"]))
+            out[f"{name}_uplink_bytes_per_round"] = float(
+                np.mean(history["uplink_bytes"]))
+        emit(f"fed/{name}", (time.time() - t0) * 1e6 / max(rounds, 1),
+             f"final_acc={history['eval_acc'][-1]:.4f} "
+             + (f"bytes/round=down:"
+                f"{out.get(f'{name}_downlink_bytes_per_round', 0):.0f}"
+                f"/up:{out.get(f'{name}_uplink_bytes_per_round', 0):.0f}"
+                if "downlink_bytes" in history else
+                f"events={rounds}"))
+
+    # -- sync (cohort barrier — the paper's mode) ---------------------------
+    t0 = time.time()
+    sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"])
+    h = SyncRound().run(sess, cohort_train, data_fn, sim.rounds,
+                        eval_fn=eval_fn)
+    _record("sync", h, t0)
+
+    # -- semi-sync (deadline straggler cutoff) ------------------------------
+    t0 = time.time()
+    sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"])
+    h = SemiSync(speeds=speeds, deadline_quantile=0.7).run(
+        sess, cohort_train, data_fn, sim.rounds, eval_fn=eval_fn)
+    out["semisync_stragglers_total"] = int(sum(h["stragglers"]))
+    _record("semisync", h, t0)
+
+    # -- buffered async (K-buffer, one engine call per flush) ----------------
+    t0 = time.time()
+    sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"])
+    num_events = sim.rounds * scfg.clients_per_round
+    h = BufferedAsync(speeds=speeds, buffer_size=scfg.clients_per_round,
+                      acfg=AsyncConfig(base_weight=0.5)).run(
+        sess, local_train, client_data_fn, num_events,
+        eval_fn=eval_fn, eval_every=scfg.clients_per_round)
+    out["async_final_acc"] = h["eval_acc"][-1]
+    out["async_flushes"] = len(h["flush_events"])
+    out["async_mean_staleness"] = float(np.mean(h["staleness"]))
+    down, up = sess.comm_totals()["downlink"], sess.comm_totals()["uplink"]
+    out["async_downlink_bytes_per_event"] = down / max(num_events, 1)
+    out["async_uplink_bytes_per_event"] = up / max(num_events, 1)
+    emit("fed/buffered_async", (time.time() - t0) * 1e6 / num_events,
+         f"final_acc={h['eval_acc'][-1]:.4f} "
+         f"flushes={out['async_flushes']} (K={scfg.clients_per_round}) "
+         f"mean_staleness={out['async_mean_staleness']:.2f}")
+
+    # -- wire accounting: heterogeneous ranks measurably cheaper ------------
+    down_by_policy = {}
+    for policy in ("uniform", "random"):
+        sess = FedSession(cfg, _scfg(quick, rank_policy=policy), base,
+                          client_sizes=kw["client_sizes"])
+        cohort = np.arange(scfg.clients_per_round)
+        sess.broadcast_cohort(cohort)
+        down_by_policy[policy] = sess.comm_log["downlink"][-1] \
+            / len(cohort)
+    out["downlink_bytes_uniform_r8"] = down_by_policy["uniform"]
+    out["downlink_bytes_random_2_8"] = down_by_policy["random"]
+    ratio = down_by_policy["random"] / down_by_policy["uniform"]
+    out["downlink_hetero_over_homo"] = ratio
+    assert ratio < 1.0, "rank-truncated payloads must beat r_max payloads"
+    emit("fed/wire_rank_truncation", 0.0,
+         f"measured broadcast bytes/client: random[2,8]="
+         f"{down_by_policy['random']:.0f} vs uniform r8="
+         f"{down_by_policy['uniform']:.0f} ({100 * ratio:.0f}%)")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -95,7 +95,48 @@ def run(quick=False):
          f"one compiled call for {n_mats} matrices; "
          f"speedup_vs_seed_loop={us_seed / us_eng:.2f}x "
          f"rel_frob_err={rel:.2e} traces={engine.trace_count}")
+    results.update(_session_rounds(quick))
     return results
+
+
+def _session_rounds(quick: bool):
+    """Full FedSession server round (redistribute -> wire round-trip ->
+    aggregate) per strategy object — the orchestration overhead the
+    paper's 'no extra cost' claim must also absorb."""
+    import jax as _jax
+    from repro.configs import get_reduced
+    from repro.fed import FedSession, ServerConfig, SimConfig
+    from repro.fed.simulation import pretrain_backbone
+    from repro.fed.strategies import from_name
+
+    cfg = get_reduced("roberta-large")
+    base = pretrain_backbone(cfg, SimConfig(num_examples=256,
+                                            pretrain_steps=0, seed=0))
+    k = 4 if quick else 10
+    out = {}
+    for strat in ("naive", "hlora", "flora"):
+        scfg = ServerConfig(num_clients=k, clients_per_round=k,
+                            strategy=strat, rank_policy="random",
+                            r_min=2, r_max=8, seed=0)
+        sess = FedSession(cfg, scfg, base, client_sizes=[64] * k)
+        cohort = np.arange(k)
+        key = _jax.random.PRNGKey(0)
+
+        def one_round():
+            stacked, heads = sess.broadcast_cohort(cohort)
+            trained = {t: {**ad, "B": _jax.random.normal(
+                key, ad["B"].shape) * ad["mask"][..., :, None]}
+                for t, ad in stacked.items()}
+            tree, up_heads = sess.collect_updates(cohort, trained, heads)
+            sess.aggregate_round(tree, cohort, stacked_heads=up_heads)
+
+        us = time_fn(one_round, warmup=1, iters=2 if quick else 5)
+        out[f"session_round_{strat}"] = us
+        emit(f"server/session_round_{strat}", us,
+             f"K={k} full wire round-trip; "
+             f"bytes down/up={sess.comm_log['downlink'][-1]}"
+             f"/{sess.comm_log['uplink'][-1]}")
+    return out
 
 
 if __name__ == "__main__":

@@ -7,6 +7,7 @@
   svd           bench_svd         — SVD back-end scaling
   serve         bench_serve       — multi-LoRA serving throughput + paged KV
   roofline      bench_roofline    — 3-term roofline from the dry-run
+  fed           bench_fed         — FedSession schedulers + measured wire bytes
 
 Output: CSV lines ``name,us_per_call,derived`` + markdown tables,
 merged into results/bench_results.json.
@@ -37,10 +38,11 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_bias, bench_comm, bench_convergence,
-                        bench_roofline, bench_serve, bench_server,
-                        bench_svd)
+                        bench_fed, bench_roofline, bench_serve,
+                        bench_server, bench_svd)
 
-ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline")
+ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline",
+       "fed")
 
 
 def _run_roofline(args):
@@ -66,6 +68,7 @@ def _runners(args):
         "comm": lambda: bench_comm.run(quick=args.quick),
         "svd": lambda: bench_svd.run(quick=args.quick),
         "server": lambda: bench_server.run(quick=args.quick),
+        "fed": lambda: bench_fed.run(quick=args.quick),
         "serve": lambda: bench_serve.run(quick=args.quick),
         "bias": lambda: bench_bias.run(quick=args.quick),
         "roofline": lambda: _run_roofline(args),

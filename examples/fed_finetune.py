@@ -1,19 +1,39 @@
-"""Paper reproduction driver: Fig. 3 / Table 1 on one task.
+"""Paper reproduction driver over the unified FedSession API.
 
-Runs all four training strategies (centralized, naive, HLoRA-homogeneous,
-HLoRA-heterogeneous) on a chosen task and prints the convergence curves
-side by side — the qualitative orderings of the paper's Fig. 3.
+Runs the training strategies (centralized, naive, HLoRA-homogeneous,
+HLoRA-heterogeneous, FLoRA stacking) on a chosen task and prints the
+convergence curves side by side — the qualitative orderings of the
+paper's Fig. 3 — plus the *measured* wire bytes per round (serialized
+Broadcast/ClientUpdate messages, claim C4).
+
+``--scheduler`` switches the orchestration mode on the same session API:
+sync (cohort barrier), semisync (deadline straggler cutoff), or async
+(K-buffered staleness-discounted merging).
 
   PYTHONPATH=src python examples/fed_finetune.py --task rte --rounds 12
+  PYTHONPATH=src python examples/fed_finetune.py --scheduler semisync
 """
 import argparse
 
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.fed import (ServerConfig, SimConfig, run_centralized,
+from repro.fed import (AsyncConfig, BufferedAsync, SemiSync, ServerConfig,
+                       SimConfig, SyncRound, run_centralized,
                        run_experiment)
 from repro.fed.simulation import pretrain_backbone
+
+
+def make_scheduler(name: str, num_clients: int, cohort: int):
+    speeds = np.linspace(0.5, 2.0, num_clients)
+    if name == "sync":
+        return SyncRound()
+    if name == "semisync":
+        return SemiSync(speeds=speeds, deadline_quantile=0.75)
+    if name == "async":
+        return BufferedAsync(speeds=speeds, buffer_size=cohort,
+                             acfg=AsyncConfig(base_weight=0.5))
+    raise ValueError(name)
 
 
 def main():
@@ -21,6 +41,8 @@ def main():
     ap.add_argument("--task", default="rte", choices=["mrpc", "qqp", "rte"])
     ap.add_argument("--rounds", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", default="sync",
+                    choices=["sync", "semisync", "async"])
     args = ap.parse_args()
 
     cfg = get_reduced("roberta-large")
@@ -36,17 +58,29 @@ def main():
     for strat, policy, label in [
             ("naive", "uniform", "naive FedAvg of A,B (Eq. 1)"),
             ("hlora", "uniform", "HLoRA homogeneous r=8"),
-            ("hlora", "random", "HLoRA heterogeneous r∈[2,8]")]:
+            ("hlora", "random", "HLoRA heterogeneous r∈[2,8]"),
+            ("flora", "random", "FLoRA stacking r∈[2,8]")]:
         scfg = ServerConfig(num_clients=30, clients_per_round=10,
                             strategy=strat, rank_policy=policy,
                             r_min=2, r_max=8, seed=args.seed)
-        runs[label] = run_experiment(cfg, sim, scfg, base_params=base)
+        runs[label] = run_experiment(
+            cfg, sim, scfg, base_params=base,
+            scheduler=make_scheduler(args.scheduler, scfg.num_clients,
+                                     scfg.clients_per_round))
 
-    print(f"\n=== {args.task.upper()} eval accuracy by round ===")
+    print(f"\n=== {args.task.upper()} eval accuracy "
+          f"({args.scheduler} scheduler) ===")
     width = max(len(k) for k in runs)
     for name, h in runs.items():
         curve = " ".join(f"{a:.2f}" for a in h["eval_acc"])
-        print(f"{name:{width}s} | {curve} | best={max(h['eval_acc']):.3f}")
+        line = f"{name:{width}s} | {curve} | best={max(h['eval_acc']):.3f}"
+        if "downlink_bytes" in h:
+            line += (f" | wire/round down="
+                     f"{np.mean(h['downlink_bytes']) / 1e3:.0f}kB up="
+                     f"{np.mean(h['uplink_bytes']) / 1e3:.0f}kB")
+        if "stragglers" in h:
+            line += f" | stragglers={sum(h['stragglers'])}"
+        print(line)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,27 @@
-from repro.fed.async_server import (AsyncConfig, AsyncFedServer,
-                                    simulate_async_rounds)
+from repro.fed.async_server import AsyncFedServer, simulate_async_rounds
 from repro.fed.client import (join_adapters, make_cohort_train,
                               make_local_train, split_adapters)
-from repro.fed.server import FedServer, ServerConfig
+from repro.fed.messages import Broadcast, ClientUpdate
+from repro.fed.schedulers import BufferedAsync, Scheduler, SemiSync, SyncRound
+from repro.fed.server import FedServer
+from repro.fed.session import (AsyncConfig, FedSession, ServerConfig,
+                               assign_ranks)
 from repro.fed.simulation import (SimConfig, rounds_to_target,
                                   run_centralized, run_experiment)
+from repro.fed.strategies import (AggregationStrategy, FLoRAStacking, HLoRA,
+                                  NaiveAvg)
 
-__all__ = ["FedServer", "ServerConfig", "SimConfig", "run_experiment",
-           "run_centralized", "rounds_to_target", "make_local_train",
-           "make_cohort_train", "split_adapters", "join_adapters",
-           "AsyncFedServer", "AsyncConfig", "simulate_async_rounds"]
+__all__ = [
+    # unified session API
+    "FedSession", "ServerConfig", "AsyncConfig", "assign_ranks",
+    "AggregationStrategy", "NaiveAvg", "HLoRA", "FLoRAStacking",
+    "Scheduler", "SyncRound", "SemiSync", "BufferedAsync",
+    "Broadcast", "ClientUpdate",
+    # experiment drivers
+    "SimConfig", "run_experiment", "run_centralized", "rounds_to_target",
+    # client-side helpers
+    "make_local_train", "make_cohort_train", "split_adapters",
+    "join_adapters",
+    # deprecated shims
+    "FedServer", "AsyncFedServer", "simulate_async_rounds",
+]

@@ -1,154 +1,87 @@
-"""Asynchronous federated HLoRA (beyond-paper; Plato — the paper's host
-framework — supports both sync and async modes, and the authors' related
-work (FedFa) is fully asynchronous).
+"""Deprecated asynchronous front door — use :class:`repro.fed.FedSession`
+with a :class:`~repro.fed.schedulers.BufferedAsync` scheduler.
 
-Instead of a synchronous cohort barrier, clients return at different times
-(simulated by a heterogeneous speed model). The server aggregates each
-arriving update immediately with a **staleness-discounted weight**
+``AsyncFedServer`` predates the unified session: it duplicated the
+redistribution math (and got it wrong — the hlora r/r_max scale correction
+was applied even under ``strategy='naive'``, and neither spectrum nor
+per-target rank adaptation worked). It now subclasses
+:class:`~repro.fed.session.FedSession`: ``adapter_for`` is the session's
+shared redistribution path (strategy-gated, cap-clamped) and ``submit`` is
+a buffer-size-1 ``flush_async`` — the same staleness-discounted running
+average, one batched engine call per event:
 
-    w(τ) = base · (1 + τ)^(-staleness_exp)
+    w(τ) = base · (1 + τ)^(-staleness_exp),  τ = version − start_version
 
-where τ = server_version − client_start_version, then re-decomposes ΔW'
-(Eq. 3) and hands the client a fresh rank-r_k adapter. Reconstruction
-(Eq. 2) makes this well-defined under HLoRA: updates from different ranks
-and different model versions combine in full-weight space — exactly the
-property the naive A/B averaging lacks (factors from different versions
-live in different subspaces, so separate averaging is doubly biased).
-
-This is a *running-average* server: ΔW_global ← (1−w)·ΔW_global + w·ΔW_k,
-kept in factored (A', B') form at r_max.
+``simulate_async_rounds`` drives the ``BufferedAsync`` scheduler; the task
+head is now folded into the session merge with the same staleness weight
+as the adapter (the legacy simulation EMA'd it at a fixed 0.9/0.1 outside
+the server, ignoring staleness).
 """
 from __future__ import annotations
 
-import heapq
+import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import agg_engine
-from repro.core.lora import make_rank_mask
-from repro.fed.server import ServerConfig, assign_ranks
-from repro.models import transformer as tf_lib
+from repro.fed.schedulers import BufferedAsync
+from repro.fed.session import AsyncConfig, FedSession, ServerConfig  # noqa: F401
 
 
 @dataclass
-class AsyncConfig:
-    staleness_exp: float = 0.5     # FedAsync-style polynomial discount
-    base_weight: float = 0.25      # mixing rate for fresh updates
-    max_staleness: int = 16        # drop updates older than this
+class _DirectUpdate:
+    """A raw (un-serialized) update for the legacy ``submit`` path."""
+    client_id: int
+    start_version: int
+    num_examples: int
+    adapter: Dict
+    head: Optional[Dict] = None
 
 
-class AsyncFedServer:
-    """Event-driven async server over the same adapter math."""
+class AsyncFedServer(FedSession):
+    """Deprecated: event-driven async server over the session math."""
 
     def __init__(self, cfg: ModelConfig, scfg: ServerConfig,
                  acfg: AsyncConfig, base_params,
                  client_speeds: Sequence[float],
                  client_sizes: Optional[Sequence[int]] = None,
                  engine: Optional[agg_engine.AggregationEngine] = None):
-        from repro.fed.client import split_head
-        self.cfg = cfg
-        self.scfg = scfg
-        self.acfg = acfg
-        # Whole-tree batched aggregation, jit-cached on tree structure:
-        # every submit after the first replays one compiled executable
-        # (the seed path re-dispatched an un-jitted per-target loop per
-        # event — the async server's hot path).
-        self.engine = engine if engine is not None \
-            else agg_engine.default_engine()
-        frozen, head = split_head(base_params)
-        self.base = frozen
-        self.global_head = head
+        warnings.warn(
+            "AsyncFedServer is deprecated; use repro.fed.FedSession with "
+            "a BufferedAsync scheduler", DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, scfg, base_params, client_sizes=client_sizes,
+                         engine=engine, acfg=acfg)
         self.speeds = np.asarray(client_speeds, np.float64)
-        self.sizes = (np.asarray(client_sizes, np.int64)
-                      if client_sizes is not None
-                      else np.full(scfg.num_clients, 64, np.int64))
-        self.rng = np.random.default_rng(scfg.seed)
-        self.ranks = assign_ranks(scfg, self.sizes, rng=self.rng)
-        self.version = 0
-        self.global_lora = tf_lib.init_lora(
-            jax.random.PRNGKey(scfg.seed), cfg)
-        self.staleness_log: List[int] = []
 
-    # -- client-facing ------------------------------------------------------
+    @property
+    def sizes(self) -> np.ndarray:          # legacy attribute name
+        return self.client_sizes
 
-    def adapter_for(self, cid: int) -> Tuple[Dict, int]:
-        """Rank-r_k truncation of the current global adapter + version."""
-        r_max = self.cfg.lora.r_max
-        r = int(self.ranks[cid])
-        mask = make_rank_mask(r, r_max)
-        out = {}
-        for t, ad in self.global_lora.items():
-            m = jnp.broadcast_to(mask, ad["mask"].shape)
-            b = ad["B"] * m[..., :, None] * (r / float(r_max))
-            out[t] = {"A": ad["A"] * m[..., None, :], "B": b, "mask": m}
-        return out, self.version
-
-    def submit(self, cid: int, trained_lora: Dict, start_version: int
-               ) -> bool:
-        """Merge one client's update; returns False if dropped (too stale)."""
-        tau = self.version - start_version
-        self.staleness_log.append(tau)
-        if tau > self.acfg.max_staleness:
-            return False
-        w = self.acfg.base_weight * (1.0 + tau) ** (-self.acfg.staleness_exp)
-        alpha = self.cfg.lora.alpha
-        # Running average in factored form: stack [global, client] per
-        # target and re-decompose the whole tree in ONE batched engine
-        # call (exact factored SVD; all targets × layers in one batch).
-        tree = {
-            t: {"A": jnp.stack([g["A"], trained_lora[t]["A"]]),
-                "B": jnp.stack([g["B"], trained_lora[t]["B"]]),
-                "mask": jnp.stack([g["mask"], trained_lora[t]["mask"]])}
-            for t, g in self.global_lora.items()}
-        new_masks = {t: jnp.ones_like(st["mask"][:1])
-                     for t, st in tree.items()}
-        eta = jnp.array([1.0 - w, w], jnp.float32)
-        out, _spectra = self.engine(tree, eta, alpha, strategy="hlora",
-                                    new_masks=new_masks, method="factored")
-        self.global_lora = {t: {k: v[0] for k, v in ad.items()}
-                            for t, ad in out.items()}
-        self.version += 1
-        return True
-
-    def global_params(self):
-        return {**self.base, **self.global_head, "lora": self.global_lora}
+    def submit(self, cid: int, trained_lora: Dict, start_version: int,
+               head=None) -> bool:
+        """Merge one client's update; returns False if dropped (too
+        stale). Equivalent to a buffer-size-1 ``flush_async``."""
+        upd = _DirectUpdate(
+            client_id=int(cid), start_version=int(start_version),
+            num_examples=int(self.client_sizes[int(cid)]),
+            adapter=trained_lora, head=head)
+        return self.flush_async([upd])[0]
 
 
 def simulate_async_rounds(
     server: AsyncFedServer, local_train, frozen, data_fn,
     num_events: int = 40,
 ) -> Dict[str, List[float]]:
-    """Discrete-event simulation: each client trains for 1/speed time
-    units; the server processes completions in arrival order."""
-    from repro.fed.client import join_adapters, split_adapters
-    n = server.scfg.num_clients
-    heap: List[Tuple[float, int, int]] = []   # (finish_time, cid, version)
-    pending: Dict[int, Dict] = {}
-    t_now = 0.0
-    for cid in range(n):
-        ad, ver = server.adapter_for(cid)
-        pending[cid] = ad
-        heapq.heappush(heap, (1.0 / server.speeds[cid], cid, ver))
-    history = {"time": [], "staleness": [], "accepted": []}
-    for _ in range(num_events):
-        t_now, cid, ver = heapq.heappop(heap)
-        factors, masks = split_adapters(pending[cid])
-        trainable = {"factors": factors, "head": server.global_head}
-        trained, _loss = local_train(frozen, trainable, masks, data_fn(cid))
-        ok = server.submit(cid, join_adapters(trained["factors"], masks),
-                           ver)
-        server.global_head = jax.tree.map(  # EMA the head too
-            lambda g, c: 0.9 * g + 0.1 * c.astype(g.dtype),
-            server.global_head, trained["head"])
-        history["time"].append(t_now)
-        history["staleness"].append(server.staleness_log[-1])
-        history["accepted"].append(bool(ok))
-        ad, ver = server.adapter_for(cid)
-        pending[cid] = ad
-        heapq.heappush(heap, (t_now + 1.0 / server.speeds[cid], cid, ver))
-    return history
+    """Discrete-event simulation over the ``BufferedAsync`` scheduler at
+    buffer size 1 (the legacy event-by-event behaviour). ``frozen``
+    keeps the legacy contract: when given, clients train against it even
+    if it differs from the session's own base."""
+    train = local_train if frozen is None else \
+        (lambda _base, trainable, masks, data:
+         local_train(frozen, trainable, masks, data))
+    sched = BufferedAsync(speeds=server.speeds, buffer_size=1,
+                          acfg=server.acfg)
+    return sched.run(server, train, data_fn, num_events)

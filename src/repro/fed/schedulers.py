@@ -1,0 +1,245 @@
+"""Scheduler policies driving a :class:`~repro.fed.session.FedSession`.
+
+A scheduler owns *when* training happens and *when* the session merges;
+the session owns *what* a merge means (strategy, redistribution, wire
+accounting). Three policies:
+
+``SyncRound``      Cohort barrier: sample → broadcast → train all → one
+                   ``aggregate_round``. Reproduces the pre-refactor
+                   ``run_experiment`` loop bit-for-bit at fixed seed
+                   (golden-tested).
+
+``SemiSync``       Deadline-based straggler cutoff: the whole cohort is
+                   broadcast and starts training, but only clients whose
+                   simulated duration (1/speed) beats the deadline make it
+                   into the round's aggregation — the stragglers' work is
+                   wasted, which is exactly the semi-synchronous
+                   trade-off. With ``deadline=None`` the deadline is a
+                   quantile of the population's durations. An infinite
+                   deadline reduces exactly to ``SyncRound``.
+
+``BufferedAsync``  Discrete-event simulation (clients finish at 1/speed
+                   intervals) with a K-buffer: updates accumulate and the
+                   session merges a full buffer in ONE staleness-discounted
+                   engine call (``flush_async``) instead of one call per
+                   event. ``buffer_size=1`` reproduces the legacy
+                   ``AsyncFedServer.submit`` event-by-event running
+                   average exactly.
+
+All schedulers share the session's redistribution path, so spectrum and
+per-target rank adaptation work in every mode.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.client import join_adapters, split_adapters
+from repro.fed.session import AsyncConfig
+
+
+class Scheduler:
+    name = "base"
+
+
+def _eval_round(history, session, eval_fn, do_eval: bool) -> None:
+    if eval_fn is None:
+        return
+    if do_eval or not history["eval_acc"]:
+        m = eval_fn(session.global_lora, session.global_head)
+        history["eval_acc"].append(float(m["acc"]))
+        history["eval_loss"].append(float(m["loss"]))
+    else:
+        history["eval_acc"].append(history["eval_acc"][-1])
+        history["eval_loss"].append(history["eval_loss"][-1])
+
+
+@dataclass
+class SyncRound(Scheduler):
+    """Synchronous cohort rounds (the paper's mode)."""
+    name = "sync"
+
+    def run(self, session, train, data_fn, num_rounds: int,
+            eval_fn=None, eval_every: int = 1) -> Dict[str, List]:
+        """``train(frozen, trainable, masks, data) -> (trainable, losses)``
+        is the vmapped cohort trainer; ``data_fn(cohort, rnd)`` returns
+        the cohort's stacked batches. Resuming a restored session
+        continues the round index from ``session.rounds_done``."""
+        history: Dict[str, List] = {
+            "round": [], "train_loss": [], "eval_acc": [], "eval_loss": [],
+            "downlink_bytes": [], "uplink_bytes": []}
+        for i in range(num_rounds):
+            rnd = session.rounds_done
+            cohort = session.sample_cohort()
+            stacked, heads = session.broadcast_cohort(cohort)
+            factors, masks = split_adapters(stacked)
+            trainable = {"factors": factors, "head": heads}
+            trainable, losses = train(session.base, trainable, masks,
+                                      data_fn(cohort, rnd))
+            tree, up_heads = session.collect_updates(
+                cohort, join_adapters(trainable["factors"], masks),
+                trainable["head"])
+            session.aggregate_round(tree, cohort, stacked_heads=up_heads)
+            history["round"].append(rnd)
+            history["train_loss"].append(float(jnp.mean(losses)))
+            history["downlink_bytes"].append(session.comm_log["downlink"][-1])
+            history["uplink_bytes"].append(session.comm_log["uplink"][-1])
+            _eval_round(history, session, eval_fn,
+                        rnd % eval_every == 0 or i == num_rounds - 1)
+        return history
+
+
+@dataclass
+class SemiSync(Scheduler):
+    """Deadline-cutoff semi-synchronous rounds (straggler mitigation)."""
+    name = "semisync"
+
+    speeds: np.ndarray = None          # per-client relative speed
+    deadline: Optional[float] = None   # None -> quantile of 1/speeds
+    deadline_quantile: float = 0.75
+
+    def resolved_deadline(self) -> float:
+        if self.deadline is not None:
+            return float(self.deadline)
+        return float(np.quantile(1.0 / np.asarray(self.speeds, np.float64),
+                                 self.deadline_quantile))
+
+    def run(self, session, train, data_fn, num_rounds: int,
+            eval_fn=None, eval_every: int = 1) -> Dict[str, List]:
+        speeds = np.asarray(self.speeds, np.float64)
+        deadline = self.resolved_deadline()
+        history: Dict[str, List] = {
+            "round": [], "train_loss": [], "eval_acc": [], "eval_loss": [],
+            "downlink_bytes": [], "uplink_bytes": [], "stragglers": [],
+            "round_time": []}
+        for i in range(num_rounds):
+            rnd = session.rounds_done
+            cohort = session.sample_cohort()
+            durations = 1.0 / speeds[cohort]
+            keep = durations <= deadline
+            if not keep.any():                 # never stall a round
+                keep[np.argmin(durations)] = True
+            stacked, heads = session.broadcast_cohort(cohort)
+            factors, masks = split_adapters(stacked)
+            trainable = {"factors": factors, "head": heads}
+            trainable, losses = train(session.base, trainable, masks,
+                                      data_fn(cohort, rnd))
+            trained = join_adapters(trainable["factors"], masks)
+            idx = np.flatnonzero(keep)
+            sub_tree = {t: {leaf: ad[leaf][idx]
+                            for leaf in ("A", "B", "mask")}
+                        for t, ad in trained.items()}
+            sub_heads = None if not trainable["head"] else {
+                k: v[idx] for k, v in trainable["head"].items()}
+            tree, up_heads = session.collect_updates(
+                cohort[idx], sub_tree, sub_heads)
+            session.aggregate_round(tree, cohort[idx],
+                                    stacked_heads=up_heads)
+            history["round"].append(rnd)
+            history["train_loss"].append(
+                float(jnp.mean(jnp.asarray(losses)[idx])))
+            history["downlink_bytes"].append(session.comm_log["downlink"][-1])
+            history["uplink_bytes"].append(session.comm_log["uplink"][-1])
+            history["stragglers"].append(int((~keep).sum()))
+            # the server closes the round when every survivor is in: at
+            # durations.max() if nobody was cut, else at the deadline —
+            # unless the force-kept fastest itself finishes after it
+            history["round_time"].append(
+                float(durations.max()) if keep.all()
+                else float(max(deadline, durations[keep].max())))
+            _eval_round(history, session, eval_fn,
+                        rnd % eval_every == 0 or i == num_rounds - 1)
+        return history
+
+
+@dataclass
+class BufferedAsync(Scheduler):
+    """K-buffered staleness-discounted asynchronous merging.
+
+    ``acfg=None`` (default) uses the session's own staleness policy; an
+    explicit AsyncConfig here overrides it for the run."""
+    name = "buffered_async"
+
+    speeds: np.ndarray = None
+    buffer_size: int = 1
+    acfg: Optional[AsyncConfig] = None
+
+    def run(self, session, local_train, data_fn, num_events: int,
+            eval_fn=None, eval_every: Optional[int] = None
+            ) -> Dict[str, List]:
+        """Discrete-event loop: each client trains for 1/speed time units;
+        completions are processed in arrival order. ``local_train`` is the
+        single-client trainer; ``data_fn(cid)`` returns one client's
+        batches. ``eval_every`` (events) adds eval_acc/eval_loss rows.
+        An explicit scheduler ``acfg`` applies only inside this run; the
+        session's own staleness policy is restored afterwards."""
+        prev_acfg = session.acfg
+        if self.acfg is not None:
+            session.acfg = self.acfg
+        try:
+            return self._run(session, local_train, data_fn, num_events,
+                             eval_fn, eval_every)
+        finally:
+            session.acfg = prev_acfg
+
+    def _run(self, session, local_train, data_fn, num_events,
+             eval_fn, eval_every) -> Dict[str, List]:
+        speeds = np.asarray(self.speeds, np.float64)
+        n = session.scfg.num_clients
+        heap: List[Tuple[float, int, int]] = []  # (finish, cid, version)
+        pending: Dict[int, Dict] = {}
+        for cid in range(n):
+            ad, ver = session.adapter_for(cid)
+            pending[cid] = ad
+            heapq.heappush(heap, (1.0 / speeds[cid], cid, ver))
+        history: Dict[str, List] = {
+            "time": [], "staleness": [], "accepted": [], "flush_events": [],
+            "downlink_bytes": [], "uplink_bytes": [],
+            "eval_acc": [], "eval_loss": []}
+        buffer: List = []
+        comm_seen = {k: sum(v) for k, v in session.comm_log.items()}
+
+        def flush():
+            if not buffer:
+                return
+            flags = session.flush_async(buffer)
+            history["staleness"].extend(
+                session.staleness_log[-len(buffer):])
+            history["accepted"].extend(flags)
+            history["flush_events"].append(len(buffer))
+            buffer.clear()
+
+        for step in range(num_events):
+            t_now, cid, ver = heapq.heappop(heap)
+            factors, masks = split_adapters(pending[cid])
+            trainable = {"factors": factors, "head": session.global_head}
+            trained, _loss = local_train(session.base, trainable, masks,
+                                         data_fn(cid))
+            buffer.append(session.make_update(
+                cid, join_adapters(trained["factors"], masks), ver,
+                head=trained["head"]))
+            if len(buffer) >= self.buffer_size:
+                flush()
+            history["time"].append(t_now)
+            if eval_fn is not None and eval_every and \
+                    (step % eval_every == 0 or step == num_events - 1):
+                m = eval_fn(session.global_lora, session.global_head)
+                history["eval_acc"].append(float(m["acc"]))
+                history["eval_loss"].append(float(m["loss"]))
+            ad, ver = session.adapter_for(cid)
+            pending[cid] = ad
+            heapq.heappush(heap, (t_now + 1.0 / speeds[cid], cid, ver))
+            # measured wire bytes this event (uplink update + fresh
+            # re-broadcast; the pre-loop cold broadcasts to all clients
+            # are excluded here but counted in session.comm_totals())
+            for key, col in (("downlink", "downlink_bytes"),
+                             ("uplink", "uplink_bytes")):
+                tot = sum(session.comm_log[key])
+                history[col].append(tot - comm_seen[key])
+                comm_seen[key] = tot
+        flush()                                  # drain a partial buffer
+        return history

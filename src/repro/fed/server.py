@@ -1,240 +1,50 @@
-"""Federated server: cohort sampling, aggregation, redistribution.
+"""Deprecated synchronous front door — use :class:`repro.fed.FedSession`.
 
-Strategies (paper §Methodology + baselines):
-  'naive'  — FedAvg the A/B factors separately (Eq. 1; with heterogeneous
-             ranks this is Cho et al. zero-padding).
-  'hlora'  — reconstruct ΔW_k, exact FedAvg, SVD re-decompose per client
-             rank (Eq. 2–3). ``svd_method`` picks the backend
-             (factored — exact & cheap — by default).
+``FedServer`` predates the unified session API: it was the sync-only
+server (cohort sampling, aggregation, redistribution) with string-dispatch
+strategies. It now subclasses :class:`~repro.fed.session.FedSession` and
+keeps only the legacy method names (``cohort_adapters`` →
+``redistribute``, ``update_global`` → ``aggregate_round``); all math —
+redistribution, scale correction, rank adaptation, head averaging — lives
+in the session, shared with the async schedulers.
 
-Global state is the full-rank (r_max) aggregated adapter; per-round
-redistribution masks it down to each sampled client's rank r_k. Because
-SVD components are ordered, masking the stored (A', B') to the top r_k
-directions IS Eq. 3's optimal truncation. A scale correction r_k / r_max
-on B keeps the *effective* update (which clients apply with their own
-alpha / r_k forward scale) exactly equal to the rank-r_k truncation of
-the aggregated ΔW'.
+``ServerConfig`` and ``assign_ranks`` are canonical in ``fed/session.py``
+and re-exported here for backwards compatibility.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
 from typing import Dict, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import agg_engine
-from repro.core import rank as rank_lib
-from repro.models import transformer as tf_lib
+from repro.fed.session import (AsyncConfig, FedSession,  # noqa: F401
+                               ServerConfig, assign_ranks)
 
 
-@dataclass
-class ServerConfig:
-    num_clients: int = 100
-    clients_per_round: int = 20
-    strategy: str = "hlora"          # naive | hlora
-    svd_method: str = "factored"     # factored | exact | randomized
-    split: str = "paper"             # paper | sqrt
-    # uniform | random | capacity | data | spectrum
-    # 'spectrum' (beyond-paper) answers the paper's open question: after
-    # each aggregation the server reads the singular spectrum of ΔW' (free
-    # — it just ran the SVD) and assigns the smallest rank capturing
-    # ``spectrum_energy`` of it, clamped per-client by capacity.
-    rank_policy: str = "random"
-    spectrum_energy: float = 0.95
-    # Per-*target* refinement of the spectrum policy: each LoRA target
-    # (q, v, w1, ...) gets its own energy rank from its own spectrum —
-    # attention projections routinely concentrate in fewer directions
-    # than MLP ones, and one pooled rank overpays the tight targets.
-    # Redistribution then masks target t to min(r_client, r_target).
-    per_target_ranks: bool = False
-    r_min: int = 2
-    r_max: int = 8
-    seed: int = 0
+class FedServer(FedSession):
+    """Deprecated: construct a ``FedSession`` (plus a ``SyncRound``
+    scheduler) instead. Kept as a delegating shim for existing callers."""
 
-
-def assign_ranks(scfg: ServerConfig, client_sizes, capacities=None,
-                 rng=None) -> np.ndarray:
-    n = scfg.num_clients
-    if scfg.rank_policy == "uniform":
-        return rank_lib.uniform_ranks(n, scfg.r_max)
-    if scfg.rank_policy == "random":
-        return rank_lib.random_ranks(n, scfg.r_min, scfg.r_max, scfg.seed)
-    if scfg.rank_policy == "capacity":
-        caps = capacities if capacities is not None else \
-            (rng or np.random.default_rng(scfg.seed)).random(n)
-        return rank_lib.capacity_ranks(caps, scfg.r_min, scfg.r_max)
-    if scfg.rank_policy == "data":
-        return rank_lib.data_ranks(client_sizes, scfg.r_min, scfg.r_max)
-    if scfg.rank_policy == "spectrum":
-        # starts at r_max; adapt_ranks() tightens it after each round
-        return rank_lib.uniform_ranks(n, scfg.r_max)
-    raise ValueError(scfg.rank_policy)
-
-
-class FedServer:
     def __init__(self, cfg: ModelConfig, server_cfg: ServerConfig,
                  base_params, client_sizes: Sequence[int],
                  capacities: Optional[Sequence[float]] = None,
                  engine: Optional[agg_engine.AggregationEngine] = None):
-        from repro.fed.client import split_head
-        self.cfg = cfg
-        self.scfg = server_cfg
-        frozen, head = split_head(base_params)
-        self.base = frozen
-        self.global_head = head   # task head: plain FedAvg (all strategies)
-        self.rng = np.random.default_rng(server_cfg.seed)
-        self.client_sizes = np.asarray(client_sizes, np.int64)
-        self.ranks = assign_ranks(server_cfg, self.client_sizes, capacities,
-                                  self.rng)
-        # Global adapter at full rank (A gaussian, B zero => ΔW = 0).
-        self.global_lora = tf_lib.init_lora(jax.random.PRNGKey(server_cfg.seed),
-                                            cfg)
-        # Batched aggregation engine: one compiled call per round, cached
-        # on tree structure. Shared process-wide by default so every
-        # server (and the benchmarks) reuse one jit cache.
-        self.engine = engine if engine is not None \
-            else agg_engine.default_engine()
-        # Singular spectrum of the last aggregated ΔW' per target,
-        # {target: (*stack, r_max)} — surfaced by the engine for free.
-        self.last_spectrum: Optional[dict] = None
-        # Per-target rank caps ({target: r}) set by adapt_ranks when
-        # scfg.per_target_ranks; None until the first adaptation.
-        self.target_ranks: Optional[Dict[str, int]] = None
-        self.rounds_done = 0
+        warnings.warn(
+            "FedServer is deprecated; use repro.fed.FedSession with a "
+            "SyncRound scheduler", DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, server_cfg, base_params,
+                         client_sizes=client_sizes, capacities=capacities,
+                         engine=engine)
 
-    # -- cohort handling ----------------------------------------------------
-
-    def sample_cohort(self) -> np.ndarray:
-        return self.rng.choice(self.scfg.num_clients,
-                               size=self.scfg.clients_per_round, replace=False)
-
-    def _cohort_masks(self, cohort: np.ndarray, mask_shape,
-                      cap: Optional[int] = None) -> jnp.ndarray:
-        """Rank masks for the cohort; ``cap`` (per-target rank) clamps
-        every client's rank from above — SVD components are ordered, so
-        the first min(r_k, cap) directions are the optimal truncation."""
-        r_max = self.cfg.lora.r_max
-        k = len(cohort)
-        masks = np.zeros((k, *mask_shape), np.float32)
-        for i, cid in enumerate(cohort):
-            r_k = int(self.ranks[cid]) if cap is None \
-                else min(int(self.ranks[cid]), int(cap))
-            masks[i, ...] = (np.arange(r_max) < r_k).astype(np.float32)
-        return jnp.asarray(masks)
+    # -- legacy method names -------------------------------------------------
 
     def cohort_adapters(self, cohort: np.ndarray) -> Dict[str, dict]:
-        """Broadcast step: per-client rank-r_k truncation of the global
-        adapter (clamped per target when per-target ranks are adapted),
-        with the r_k/r_max scale correction (hlora only — the
-        naive baseline distributes plain truncated factors, as in Cho)."""
-        k = len(cohort)
-        r_max = self.cfg.lora.r_max
-        out = {}
-        for t, ad in self.global_lora.items():
-            cap = None if self.target_ranks is None \
-                else self.target_ranks.get(t)
-            m = self._cohort_masks(cohort, ad["mask"].shape, cap)
-            a = jnp.broadcast_to(ad["A"][None], (k, *ad["A"].shape)) * m[..., None, :]
-            b = jnp.broadcast_to(ad["B"][None], (k, *ad["B"].shape)) * m[..., :, None]
-            if self.scfg.strategy == "hlora":
-                r_eff = jnp.maximum(jnp.sum(m, axis=-1), 1.0)   # (K, *stack)
-                b = b * (r_eff / float(r_max))[..., None, None]
-            out[t] = {"A": a, "B": b, "mask": m}
-        return out
-
-    def cohort_weights(self, cohort: np.ndarray) -> jnp.ndarray:
-        n_k = self.client_sizes[cohort].astype(np.float64)
-        return jnp.asarray(n_k / n_k.sum(), jnp.float32)
-
-    # -- aggregation ---------------------------------------------------------
-
-    def cohort_heads(self, cohort: np.ndarray):
-        k = len(cohort)
-        return jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (k, *x.shape)),
-            self.global_head)
+        return self.redistribute(cohort)
 
     def update_global(self, stacked_trained, cohort: np.ndarray,
                       stacked_heads=None) -> None:
-        """One aggregation (Eq. 2) + one SVD (Eq. 3) per target, output at
-        full rank r_max; redistribution happens lazily in cohort_adapters.
-        Task heads (if any) are plain-FedAvg'd — identical under all
-        strategies, so the comparison isolates the adapter aggregation."""
-        eta = self.cohort_weights(cohort)
-        if stacked_heads:
-            self.global_head = jax.tree.map(
-                lambda x: jnp.tensordot(eta, x.astype(jnp.float32),
-                                        axes=1).astype(x.dtype),
-                stacked_heads)
-        full = {t: jnp.ones_like(ad["mask"][:1])
-                for t, ad in stacked_trained.items()}
-        out, spectra = self.engine(
-            stacked_trained, eta, self.cfg.lora.alpha,
-            strategy=self.scfg.strategy, method=self.scfg.svd_method,
-            split=self.scfg.split, new_masks=full,
-            key=jax.random.PRNGKey(int(self.rng.integers(2 ** 31))))
-        self.global_lora = {
-            t: {"A": ad["A"][0], "B": ad["B"][0], "mask": ad["mask"][0]}
-            for t, ad in out.items()}
-        self.last_spectrum = spectra if self.scfg.strategy == "hlora" \
-            else None
-        if self.scfg.rank_policy == "spectrum":
-            self.adapt_ranks()
-        self.rounds_done += 1
-
-    def _target_spectra(self) -> Dict[str, np.ndarray]:
-        """Per-target mean singular spectrum of the aggregated ΔW'.
-
-        Straight from the engine when available (it just ran the SVD, so
-        Σ is free). When no engine spectrum exists — e.g. a restored
-        server that has not aggregated yet — fall back to deriving it
-        from the stored factors, normalizing per split: under 'paper' B'
-        rows have norm σ, under 'sqrt' both factors carry √σ (so row
-        norms of B' are √σ and must be squared) — the same normalization
-        per target, so the per-target policy is split-invariant too."""
-        if self.last_spectrum is not None:
-            return {
-                t: np.asarray(s, np.float64).reshape(-1,
-                                                     s.shape[-1]).mean(0)
-                for t, s in self.last_spectrum.items()}
-        out = {}
-        for t, ad in self.global_lora.items():
-            b = np.asarray(jnp.linalg.norm(ad["B"], axis=-1))  # (L,r)|(r,)
-            s = b.reshape(-1, b.shape[-1]).mean(axis=0)
-            if self.scfg.split == "sqrt":
-                s = s ** 2          # row norms of B' are √σ under 'sqrt'
-            out[t] = s
-        return out
-
-    def adapt_ranks(self) -> None:
-        """Beyond-paper adaptive policy: read the singular spectrum of the
-        aggregated ΔW' and pick the smallest rank capturing
-        ``spectrum_energy`` of it (``agg_engine.rank_for_energy``).
-
-        Per-client: one rank from the spectra pooled across targets
-        (mean σ² — squaring before pooling, as the seed did; pooling
-        then squaring weights targets with dissimilar spectra
-        differently and shifts the cutoff). With
-        ``scfg.per_target_ranks``, each target additionally gets its own
-        energy rank from its own spectrum; redistribution masks target t
-        to min(r_client, r_target), so a tight attention projection
-        stops paying for a fat MLP one."""
-        spectra = self._target_spectra()
-        e, lo, hi = (self.scfg.spectrum_energy, self.scfg.r_min,
-                     self.scfg.r_max)
-        # rank_for_energy pools leading axes by mean σ² itself — the
-        # stacked (T, r) spectra give exactly the mean-over-targets
-        # energy cutoff
-        r_star = agg_engine.rank_for_energy(
-            np.stack(list(spectra.values())), e, lo, hi)
-        self.ranks = np.full((self.scfg.num_clients,), r_star, np.int32)
-        if self.scfg.per_target_ranks:
-            self.target_ranks = {
-                t: agg_engine.rank_for_energy(s, e, lo, hi)
-                for t, s in spectra.items()}
-
-    def global_params(self):
-        return {**self.base, **self.global_head, "lora": self.global_lora}
+        self.aggregate_round(stacked_trained, cohort,
+                             stacked_heads=stacked_heads)

@@ -5,9 +5,16 @@ K clients with Dirichlet non-IID shards of a classification task, LoRA
 local training (adapters + task head, as in Hu et al.'s GLUE setup), and
 one of the aggregation strategies per round.
 
-``run_experiment`` returns a history {round, train_loss, eval_acc, ...}
-that benchmarks/bench_convergence.py turns into Fig. 3, and
-benchmarks/bench_table1.py into Table 1.
+``run_experiment`` is a thin driver over the unified
+:class:`~repro.fed.session.FedSession` API: it stands up the data, the
+cohort trainer and the eval function, then hands control to a
+:class:`~repro.fed.schedulers.Scheduler` (``SyncRound`` by default —
+golden-tested to reproduce the pre-refactor loop bit-for-bit; pass
+``scheduler=SemiSync(...)`` / ``BufferedAsync(...)`` for the other
+modes). It returns a history {round, train_loss, eval_acc, eval_loss,
+downlink_bytes, uplink_bytes, ...} that benchmarks/bench_convergence.py
+turns into Fig. 3 / Table 1 and benchmarks/bench_fed.py into the
+orchestration comparison.
 """
 from __future__ import annotations
 
@@ -24,7 +31,8 @@ from repro.data import (client_batches, dirichlet_partition,
                         make_pair_classification)
 from repro.fed.client import (join_adapters, make_cohort_train,
                               make_local_train, split_adapters, split_head)
-from repro.fed.server import FedServer, ServerConfig
+from repro.fed.schedulers import BufferedAsync, Scheduler, SyncRound
+from repro.fed.session import FedSession, ServerConfig
 from repro.models import model as model_lib
 from repro.optim import adamw, apply_updates
 
@@ -93,14 +101,12 @@ def pretrain_backbone(cfg: ModelConfig, sim: SimConfig):
 # Federated experiment
 # ---------------------------------------------------------------------------
 
-def run_experiment(
-    cfg: ModelConfig,
-    sim: SimConfig,
-    scfg: ServerConfig,
-    base_params=None,
-    eval_every: int = 1,
-    engine=None,
-) -> Dict[str, List[float]]:
+def make_experiment_setup(cfg: ModelConfig, sim: SimConfig,
+                          scfg: ServerConfig, base_params=None):
+    """Data + trainer + eval plumbing shared by every scheduler mode.
+
+    Returns ``(session_kwargs, cohort_train, local_train, data_fn,
+    client_data_fn, eval_fn)`` — the pieces a Scheduler.run needs."""
     if base_params is None:
         base_params = pretrain_backbone(cfg, sim)
     frozen, _ = split_head(base_params)
@@ -115,15 +121,9 @@ def run_experiment(
 
     shards = dirichlet_partition(labels, scfg.num_clients,
                                  sim.dirichlet_alpha, seed=sim.seed)
-    # The server aggregates with the batched engine (shared process-wide
-    # jit cache unless the caller passes a dedicated one): round 1 traces,
-    # every later round replays the compiled whole-tree aggregation.
-    server = FedServer(cfg, scfg, base_params,
-                       client_sizes=[len(s) for s in shards],
-                       engine=engine)
-
     opt = adamw(sim.lr)
     cohort_train = make_cohort_train(cfg, opt)
+    local_train = jax.jit(make_local_train(cfg, opt))
 
     @jax.jit
     def eval_fn(lora_tree, head):
@@ -131,26 +131,59 @@ def run_experiment(
         _, m = model_lib.loss_fn(params, ev_batch, cfg, remat=False)
         return m
 
-    history = {"round": [], "train_loss": [], "eval_acc": [], "eval_loss": []}
-    for rnd in range(sim.rounds):
-        cohort = server.sample_cohort()
-        stacked = server.cohort_adapters(cohort)
-        factors, masks = split_adapters(stacked)
-        trainable = {"factors": factors, "head": server.cohort_heads(cohort)}
-        data = _stack_client_data(tokens, labels, shards, cohort, sim, rnd)
-        trainable, losses = cohort_train(frozen, trainable, masks, data)
-        server.update_global(join_adapters(trainable["factors"], masks),
-                             cohort, stacked_heads=trainable["head"])
-        history["round"].append(rnd)
-        history["train_loss"].append(float(jnp.mean(losses)))
-        if rnd % eval_every == 0 or rnd == sim.rounds - 1:
-            m = eval_fn(server.global_lora, server.global_head)
-            history["eval_acc"].append(float(m["acc"]))
-            history["eval_loss"].append(float(m["loss"]))
-        else:
-            history["eval_acc"].append(history["eval_acc"][-1])
-            history["eval_loss"].append(history["eval_loss"][-1])
-    return history
+    def data_fn(cohort, rnd):
+        return _stack_client_data(tokens, labels, shards, cohort, sim, rnd)
+
+    rng = np.random.default_rng(sim.seed + 4242)
+
+    def client_data_fn(cid):          # async mode: one client's batches
+        picks = rng.integers(0, len(shards[cid]),
+                             size=(sim.local_steps, sim.local_batch))
+        idx = shards[cid][picks]
+        return {"tokens": jnp.asarray(tokens[idx]),
+                "labels": jnp.asarray(labels[idx])}
+
+    session_kwargs = dict(base_params=base_params,
+                          client_sizes=[len(s) for s in shards])
+    return (session_kwargs, cohort_train, local_train, data_fn,
+            client_data_fn, eval_fn)
+
+
+def run_experiment(
+    cfg: ModelConfig,
+    sim: SimConfig,
+    scfg: ServerConfig,
+    base_params=None,
+    eval_every: int = 1,
+    engine=None,
+    strategy=None,
+    scheduler: Optional[Scheduler] = None,
+    track_comm: bool = True,
+) -> Dict[str, List[float]]:
+    """One federated experiment = one FedSession + one Scheduler.
+
+    ``strategy`` (an AggregationStrategy or name) defaults to
+    ``scfg.strategy``; ``scheduler`` defaults to ``SyncRound()``;
+    ``track_comm=False`` skips the wire round-trip (history byte columns
+    become 0) for callers that only want the curves. The session
+    aggregates with the batched engine (shared process-wide jit cache
+    unless the caller passes a dedicated one): round 1 traces, every
+    later round replays the compiled whole-tree aggregation.
+    """
+    (session_kwargs, cohort_train, local_train, data_fn, client_data_fn,
+     eval_fn) = make_experiment_setup(cfg, sim, scfg, base_params)
+    session = FedSession(cfg, scfg, engine=engine, strategy=strategy,
+                         track_comm=track_comm, **session_kwargs)
+    sched = scheduler if scheduler is not None else SyncRound()
+    if isinstance(sched, BufferedAsync):
+        # one sync round ≈ clients_per_round events: honor the caller's
+        # eval cadence at the same granularity
+        return sched.run(session, local_train, client_data_fn,
+                         num_events=sim.rounds * scfg.clients_per_round,
+                         eval_fn=eval_fn,
+                         eval_every=eval_every * scfg.clients_per_round)
+    return sched.run(session, cohort_train, data_fn, sim.rounds,
+                     eval_fn=eval_fn, eval_every=eval_every)
 
 
 def run_centralized(

@@ -1,0 +1,110 @@
+"""Pluggable aggregation strategies for the :class:`~repro.fed.session.FedSession`.
+
+A strategy is a small declarative object: it names the batched-engine
+configuration that aggregates the cohort (every strategy drives
+``core/agg_engine.py`` — one jit-cached whole-tree call) and the
+redistribution policy the shared broadcast path applies (scale correction
+or not). Adding a baseline is a one-class addition — no string dispatch
+scattered across sync and async servers, no divergent redistribution math.
+
+Built-ins:
+
+``NaiveAvg``       Eq. 1 — FedAvg the A/B factors separately; with
+                   heterogeneous rank masks this is the zero-padding
+                   baseline of Cho et al. Broadcast is the plain truncated
+                   global (no scale correction). No SVD → no spectrum, so
+                   spectrum rank adaptation falls back to factor norms.
+
+``HLoRA``          Eq. 2–3 — reconstruct ΔW_k, exact FedAvg, SVD
+                   re-decompose; broadcast applies the r_k/r_max scale
+                   correction so each client's *effective* update is
+                   exactly the rank-r_k truncation of ΔW'.
+
+``FLoRAStacking``  Wang et al.'s stacking aggregation: clients' factors are
+                   stacked into P (d_in, Σr_k) / Q (Σr_k, d_out) so the
+                   FedAvg of the effective updates is computed *noise-free*
+                   — exactly what the engine's ``method='factored'`` path
+                   builds before its SVD. Two deviations from the paper,
+                   forced by our static-shape (r_max) global state: (1) the
+                   stacked update is truncated back to r_max by SVD
+                   (Eckart–Young optimal; exact whenever the stack's
+                   numerical rank ≤ r_max, which holds early in federated
+                   training where all clients truncate one shared global);
+                   (2) clients keep persistent rank masks instead of
+                   re-initializing fresh adapters each round, so the
+                   broadcast hands them the *plain* truncated stack
+                   (``split='sqrt'`` balances the factors like FLoRA's
+                   stacked redistribution; no HLoRA scale correction).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class AggregationStrategy:
+    """Base class — subclasses override the class-level policy fields."""
+
+    #: short name, also accepted as ``ServerConfig.strategy`` string
+    name: str = "base"
+    #: engine strategy kwarg ("naive" | "hlora" — the two batched kernels)
+    engine_strategy: str = "hlora"
+    #: SVD backend for reconstruction-based aggregation
+    method: str = "factored"
+    #: how σ is split between the redistributed factors
+    split: str = "paper"
+    #: apply the r_eff/r_max correction to broadcast B factors
+    scale_correction: bool = False
+    #: the engine surfaces a meaningful singular spectrum (drives
+    #: spectrum/per-target rank adaptation without the factor-norm fallback)
+    has_spectrum: bool = False
+
+    def engine_kwargs(self) -> dict:
+        return {"strategy": self.engine_strategy, "method": self.method,
+                "split": self.split}
+
+
+@dataclass(frozen=True)
+class NaiveAvg(AggregationStrategy):
+    name: str = "naive"
+    engine_strategy: str = "naive"
+    scale_correction: bool = False
+    has_spectrum: bool = False
+
+
+@dataclass(frozen=True)
+class HLoRA(AggregationStrategy):
+    name: str = "hlora"
+    engine_strategy: str = "hlora"
+    method: str = "factored"
+    split: str = "paper"
+    scale_correction: bool = True
+    has_spectrum: bool = True
+
+
+@dataclass(frozen=True)
+class FLoRAStacking(AggregationStrategy):
+    name: str = "flora"
+    engine_strategy: str = "hlora"   # factored path == the stacking trick
+    method: str = "factored"
+    split: str = "sqrt"
+    scale_correction: bool = False
+    has_spectrum: bool = True
+
+
+def from_name(name: str, scfg=None) -> AggregationStrategy:
+    """Resolve a ``ServerConfig.strategy`` string to a strategy object.
+
+    ``'hlora'`` picks up the config's ``svd_method``/``split`` so the
+    object-based API reproduces the string-dispatch behaviour exactly.
+    """
+    if name == "naive":
+        return NaiveAvg()
+    if name == "hlora":
+        if scfg is not None:
+            return HLoRA(method=scfg.svd_method, split=scfg.split)
+        return HLoRA()
+    if name == "flora":
+        return FLoRAStacking()
+    raise ValueError(f"unknown aggregation strategy {name!r}; "
+                     f"known: naive, hlora, flora")
