@@ -11,6 +11,12 @@ Reported per scheduler: final eval accuracy, events/rounds executed, and
 measured downlink/uplink bytes per round — plus the rank-truncation check
 (heterogeneous downlink < homogeneous r_max downlink, on serialized
 bytes, not a formula).
+
+Plus the ``mesh_*`` keys: the shard_map'd aggregation engine timed on a
+1-device vs an 8-device host-CPU mesh (a subprocess, since the forced
+device count must precede jax init), with bit-identity between the two
+asserted in the child — the tier-1 guard that the mesh path neither rots
+nor drifts numerically.
 """
 from __future__ import annotations
 
@@ -19,7 +25,7 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_mesh_child
 from repro.configs import get_reduced
 from repro.fed import (AsyncConfig, BufferedAsync, FedSession, SemiSync,
                        ServerConfig, SimConfig, SyncRound)
@@ -121,8 +127,70 @@ def run(quick: bool = False) -> Dict:
          f"measured broadcast bytes/client: random[2,8]="
          f"{down_by_policy['random']:.0f} vs uniform r8="
          f"{down_by_policy['uniform']:.0f} ({100 * ratio:.0f}%)")
+
+    # -- mesh scaling: shard_map'd aggregation, 1 vs 8 host devices ---------
+    out.update(run_mesh_child("benchmarks.bench_fed", quick))
+    emit("fed/mesh_scaling", out["mesh_agg_us_sharded"],
+         f"agg {out['mesh_agg_us_single']:.0f}us@1dev -> "
+         f"{out['mesh_agg_us_sharded']:.0f}us@{out['mesh_devices']}dev "
+         f"({out['mesh_agg_speedup']:.2f}x), "
+         f"bit_identical={out['mesh_agg_bit_identical']}")
     return out
 
 
+def _mesh_child(quick: bool) -> None:
+    """Child-process half of the mesh-scaling section (8 forced host
+    devices): time the aggregation engine's jitted round on one device
+    and shard_map'd over the mesh, and assert the factors/spectra are
+    bit-identical. Prints one MESH_RESULT json line for the parent."""
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.common import MESH_RESULT_TAG, time_fn
+    from repro.core.agg_engine import AggregationEngine
+    from repro.launch.mesh import make_host_mesh
+
+    k, layers, d, r = (4, 4, 32, 4) if quick else (16, 12, 128, 8)
+    key = jax.random.PRNGKey(0)
+    adapters = {}
+    for j, t in enumerate(("q", "v")):
+        ks = jax.random.split(jax.random.fold_in(key, j), 3)
+        adapters[t] = {
+            "A": jax.random.normal(ks[0], (k, layers, d, r), jnp.float32),
+            "B": jax.random.normal(ks[1], (k, layers, r, d), jnp.float32),
+            "mask": (jax.random.uniform(ks[2], (k, layers, r)) > 0.3
+                     ).astype(jnp.float32)}
+    eta = jnp.ones((k,)) / k
+    mesh = make_host_mesh(data=8)
+    e1 = AggregationEngine(factored_impl="qr")
+    e8 = AggregationEngine(factored_impl="qr", mesh=mesh)
+    o1, s1 = e1(adapters, eta, 8.0)
+    o8, s8 = e8(adapters, eta, 8.0)
+    identical = all(
+        bool(jnp.array_equal(o1[t][leaf], o8[t][leaf]))
+        for t in o1 for leaf in ("A", "B", "mask")) and all(
+        bool(jnp.array_equal(s1[t], s8[t])) for t in s1)
+    assert identical, "sharded aggregation drifted from single-device"
+    iters = 3 if quick else 10
+    us1 = time_fn(lambda: e1(adapters, eta, 8.0), warmup=1, iters=iters)
+    us8 = time_fn(lambda: e8(adapters, eta, 8.0), warmup=1, iters=iters)
+    import json as json_mod
+    print(MESH_RESULT_TAG + json_mod.dumps({
+        "mesh_devices": 8,
+        "mesh_agg_batch_items": 2 * layers,
+        "mesh_agg_us_single": us1,
+        "mesh_agg_us_sharded": us8,
+        "mesh_agg_speedup": us1 / us8,
+        "mesh_agg_bit_identical": int(identical)}), flush=True)
+
+
 if __name__ == "__main__":
-    run(quick=True)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh-child", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    if a.mesh_child:
+        _mesh_child(a.quick)
+    else:
+        run(quick=True)

@@ -30,6 +30,12 @@ with the zero-cost n-gram prompt-lookup drafter on repetitive traffic.
 Both are lossless: outputs are asserted byte-identical to plain decode.
 Emits acceptance rate, tok/s vs plain, and rollback page counts.
 
+Part 5 — mesh scaling (PR 6): the same greedy wave through an unsharded
+engine vs a data-parallel engine on a host-CPU mesh (request rows and
+page sub-pools sharded, slabs replicated), in a subprocess because the
+forced device count must precede jax init. Outputs are asserted
+byte-identical between the two; tok/s at 1 vs N devices is reported.
+
 Each path runs one warmup wave first so compile time is excluded from
 every side (steady-state throughput is the serving metric; a fleet
 compiles once and serves forever).
@@ -41,7 +47,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, run_mesh_child
 from repro.configs import get_reduced
 from repro.models import model as model_lib
 from repro.serve import (AdapterRegistry, NGramDrafter, ScriptedDrafter,
@@ -336,6 +342,71 @@ def _speculative(results, cfg, key, params, adapters, quick):
          f"{results['spec_ngram_exact']:.2f}")
 
 
+def _mesh_scaling(results, quick):
+    """1 vs N host devices through the data-parallel engine, measured in
+    a child process (the forced device count must precede jax init)."""
+    results.update(run_mesh_child("benchmarks.bench_serve", quick))
+    emit("serve/mesh_scaling", 0.0,
+         f"{results['mesh_tok_per_s_single']:.0f} tok/s@1dev vs "
+         f"{results['mesh_tok_per_s_sharded']:.0f} tok/s@"
+         f"{results['mesh_devices']}dev, "
+         f"exact={results['mesh_scaling_exact']}, "
+         f"traces_flat={results['mesh_traces_flat']}")
+
+
+def _mesh_child(quick: bool) -> None:
+    """Child-process half of the mesh-scaling section: same requests
+    through an unsharded and a mesh-sharded engine, outputs asserted
+    byte-identical, steady-state wave timed for both. Prints one
+    MESH_RESULT json line for the parent."""
+    import json
+
+    import jax
+
+    from benchmarks.common import MESH_RESULT_TAG
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import ServeEngine
+
+    cfg, key, params, adapters = _setup()
+    ndev = 2 if quick else 8
+    n_req = 2 if quick else 8
+    steps = 4 if quick else 16
+    prompt_len = 8
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 3), (n_req, prompt_len), 3,
+        cfg.vocab_size))
+    mesh = make_host_mesh(data=ndev)
+    outs, tok_s, traces_flat = {}, {}, {}
+    for name, m in (("single", None), ("sharded", mesh)):
+        engine = ServeEngine(params, cfg, _registry(cfg, adapters),
+                             max_batch=n_req,
+                             max_seq=prompt_len + steps, page_size=8,
+                             prefill_chunk=prompt_len, mesh=m)
+
+        def wave():
+            uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
+                                  max_new_tokens=steps)
+                    for i in range(n_req)]
+            t0 = time.time()
+            done = engine.run()
+            return time.time() - t0, [done[u] for u in uids]
+
+        wave()                                   # warmup compile
+        traces_w1 = engine.trace_count
+        t, outs[name] = wave()
+        traces_flat[name] = int(engine.trace_count == traces_w1)
+        tok_s[name] = n_req * steps / t
+    exact = sum(int((a == b).all())
+                for a, b in zip(outs["single"], outs["sharded"])) / n_req
+    assert exact == 1.0, "sharded decode drifted from single-device"
+    print(MESH_RESULT_TAG + json.dumps({
+        "mesh_devices": ndev,
+        "mesh_tok_per_s_single": tok_s["single"],
+        "mesh_tok_per_s_sharded": tok_s["sharded"],
+        "mesh_scaling_exact": exact,
+        "mesh_traces_flat": min(traces_flat.values())}), flush=True)
+
+
 def run(quick=False):
     cfg, key, params, adapters = _setup()
     results = {}
@@ -343,8 +414,17 @@ def run(quick=False):
     _paged_vs_dense(results, cfg, key, params, adapters, quick)
     _prefill(results, cfg, key, params, adapters, quick)
     _speculative(results, cfg, key, params, adapters, quick)
+    _mesh_scaling(results, quick)
     return results
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh-child", action="store_true")
+    ap.add_argument("--quick", action="store_true")
+    a = ap.parse_args()
+    if a.mesh_child:
+        _mesh_child(a.quick)
+    else:
+        run()

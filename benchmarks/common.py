@@ -1,6 +1,10 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -22,3 +26,39 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw) -> float:
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     """CSV row: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+MESH_RESULT_TAG = "MESH_RESULT "
+
+
+def run_mesh_child(module: str, quick: bool, devices: int = 8) -> dict:
+    """Run ``python -m <module> --mesh-child`` in a subprocess with
+    ``devices`` forced host devices and return its MESH_RESULT json.
+
+    ``--xla_force_host_platform_device_count`` only takes effect before
+    the first jax device query, and the benchmark parent has long since
+    initialized jax on one device — so every mesh-scaling section
+    measures in a child process, exactly like tests/test_mesh.py. The
+    child prints one ``MESH_RESULT {...}`` line; everything else it says
+    is passed through for the log."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count={devices}"
+                        ).strip()
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, "-m", module, "--mesh-child"]
+    if quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=1200)
+    if proc.returncode != 0:
+        tail = ((proc.stdout or "") + (proc.stderr or ""))[-2000:]
+        raise RuntimeError(f"mesh child {module} failed:\n{tail}")
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith(MESH_RESULT_TAG):
+            return json.loads(line[len(MESH_RESULT_TAG):])
+    raise RuntimeError(f"mesh child {module} printed no "
+                       f"{MESH_RESULT_TAG!r} line:\n{proc.stdout[-2000:]}")

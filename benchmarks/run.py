@@ -9,6 +9,11 @@
   roofline      bench_roofline    — 3-term roofline from the dry-run
   fed           bench_fed         — FedSession schedulers + measured wire bytes
 
+The ``fed`` and ``serve`` sections each end with a mesh-scaling
+subsection (``mesh_*`` keys): the shard_map'd engine at 1 vs N forced
+host devices, measured in a subprocess child (the device count must be
+forced before jax initializes) with single-device equivalence asserted.
+
 Output: CSV lines ``name,us_per_call,derived`` + markdown tables,
 merged into results/bench_results.json.
 

@@ -37,8 +37,12 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import svd as svd_lib
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_rules
 
 StackedAdapter = Dict[str, jax.Array]
 
@@ -225,15 +229,24 @@ class AggregationEngine:
     """
 
     def __init__(self, use_pallas: Optional[bool] = None,
-                 factored_impl: str = "gram"):
+                 factored_impl: str = "gram", mesh=None):
         """``factored_impl`` selects the method='factored' SVD backend:
         'gram' (default) — CholeskyQR, all-matmul, ~4× faster at server
         scale; 'qr' — LAPACK Householder QR, bit-identical to the seed
-        per-target ``svd_factored`` path (used by equivalence tests)."""
+        per-target ``svd_factored`` path (used by equivalence tests).
+
+        ``mesh``: an optional device mesh with a 'data' axis. Each shape
+        group's (T·L, K, d, r) stacked batch is shard_map'd over the data
+        axes — every batch item (one target×layer aggregation) runs
+        entirely on one device, so the sharded path evaluates the exact
+        same per-item op sequence as the single-device path (equivalence
+        pinned in tests). Batches that don't divide the device count are
+        tile-padded with leading items (valid data, sliced off after)."""
         self._jitted: Dict[tuple, callable] = {}
         self.trace_count = 0   # incremented at trace time only
         self.use_pallas = use_pallas
         self.factored_impl = factored_impl
+        self.mesh = mesh
 
     # -- public entry -------------------------------------------------------
 
@@ -253,7 +266,7 @@ class AggregationEngine:
             raise ValueError(f"unknown strategy {strategy!r}")
         pallas_map = self._resolve_pallas(adapters, strategy, method)
         cfg = (strategy, method, split, new_masks is not None, pallas_map,
-               self.factored_impl)
+               self.factored_impl, self.mesh)
         fn = self._jitted.get(cfg)
         if fn is None:
             fn = jax.jit(partial(self._run, strategy=strategy, method=method,
@@ -310,9 +323,8 @@ class AggregationEngine:
                             item, out, spectra)
         return out, spectra
 
-    @staticmethod
-    def _run_group(adapters, new_masks, eta, alpha, key, members, item,
-                   out, spectra):
+    def _run_group(self, adapters, new_masks, eta, alpha, key, members,
+                   item, out, spectra):
         # Stack the group: (T, K, *stack, d_in, r) etc.
         a = jnp.stack([adapters[n]["A"] for n in members])
         b = jnp.stack([adapters[n]["B"] for n in members])
@@ -339,9 +351,8 @@ class AggregationEngine:
         nmb = to_batch(nm, k_out, r)
         keys = jax.random.split(key, batch)
 
-        a_o, b_o, s = jax.vmap(
-            item, in_axes=(0, 0, 0, 0, None, None, 0))(
-            ab, bb, mb, nmb, eta, alpha, keys)
+        a_o, b_o, s = self._dispatch_batch(item, ab, bb, mb, nmb, eta,
+                                           alpha, keys, batch)
 
         def from_batch(x):
             # (T·L, K', *mat) -> (T, K', *stack, *mat)
@@ -357,6 +368,49 @@ class AggregationEngine:
                 else new_masks[name]
             out[name] = {"A": a_o[i], "B": b_o[i], "mask": mask_out}
             spectra[name] = s[i]
+
+    def _dispatch_batch(self, item, ab, bb, mb, nmb, eta, alpha, keys,
+                        batch: int):
+        """Run the vmapped per-item pipeline over the stacked batch —
+        locally, or shard_map'd over the mesh's data axes. Items are
+        independent (the only cross-item state, eta/alpha, is
+        replicated), so sharding needs no collectives: each device runs
+        the identical per-item math on its slice of the batch."""
+        vmapped = jax.vmap(item, in_axes=(0, 0, 0, 0, None, None, 0))
+        ndev = mesh_lib.data_axis_size(self.mesh)
+        if ndev <= 1:
+            return vmapped(ab, bb, mb, nmb, eta, alpha, keys)
+        pad = (-batch) % ndev
+        if pad:
+            # Tile-pad with leading items: real data (zero-padding would
+            # push rank-0 garbage through Cholesky), sliced off below.
+            sel = jnp.arange(pad) % batch
+
+            def tile(x):
+                return jnp.concatenate([x, jnp.take(x, sel, axis=0)])
+
+            ab, bb, mb, nmb, keys = map(tile, (ab, bb, mb, nmb, keys))
+
+        axes = shard_rules.data_shard_axes(self.mesh)
+
+        def bspec(x):
+            return P(axes, *((None,) * (x.ndim - 1)))
+
+        def rspec(x):
+            return P(*((None,) * jnp.ndim(x)))
+
+        a_sh = jax.eval_shape(vmapped, ab, bb, mb, nmb, eta, alpha, keys)
+        fn = shard_map(
+            vmapped, mesh=self.mesh,
+            in_specs=(bspec(ab), bspec(bb), bspec(mb), bspec(nmb),
+                      rspec(eta), rspec(alpha), bspec(keys)),
+            out_specs=jax.tree.map(bspec, a_sh),
+            # eigh/cholesky custom calls carry no replication rule
+            check_rep=False)
+        a_o, b_o, s = fn(ab, bb, mb, nmb, eta, alpha, keys)
+        if pad:
+            a_o, b_o, s = a_o[:batch], b_o[:batch], s[:batch]
+        return a_o, b_o, s
 
     # -- introspection ------------------------------------------------------
 

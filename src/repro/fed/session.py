@@ -110,7 +110,8 @@ class FedSession:
                  engine: Optional[agg_engine.AggregationEngine] = None,
                  strategy=None,
                  acfg: Optional[AsyncConfig] = None,
-                 track_comm: bool = True):
+                 track_comm: bool = True,
+                 mesh=None):
         from repro.fed.client import split_head
         self.cfg = cfg
         self.scfg = scfg
@@ -134,9 +135,16 @@ class FedSession:
                                             cfg)
         # Batched aggregation engine: one compiled call per merge, cached
         # on tree structure. Shared process-wide by default so every
-        # session (and the benchmarks) reuse one jit cache.
-        self.engine = engine if engine is not None \
-            else agg_engine.default_engine()
+        # session (and the benchmarks) reuse one jit cache. Passing a
+        # ``mesh`` makes every strategy × scheduler multi-device through
+        # this one choke point: the engine shard_maps each stacked
+        # aggregation batch over the mesh's data axes.
+        if engine is not None:
+            self.engine = engine
+        elif mesh is not None:
+            self.engine = agg_engine.AggregationEngine(mesh=mesh)
+        else:
+            self.engine = agg_engine.default_engine()
         # Singular spectrum of the last aggregated ΔW' per target,
         # {target: (*stack, r_max)} — surfaced by the engine for free.
         self.last_spectrum: Optional[dict] = None

@@ -101,15 +101,26 @@ def recon_agg(a, b, eta, *, interpret: Optional[bool] = None,
 
 
 def bgmv(x, a, b, idx, *, interpret: Optional[bool] = None,
-         block_n: int = 256):
+         block_n: int = 256, batch_align: int = 1):
     """Batched-gather multi-LoRA decode: y[i] = x[i] @ A[idx[i]] @ B[idx[i]].
 
     x: (B, d_in), a: (S, d_in, R), b: (S, R, d_out), idx: (B,) int32.
     Pads d_in/d_out/R up to lane multiples (zero rows/cols and zero rank
     directions contribute nothing) and slices the result back. Rank masks
     and the alpha/r_eff scale are the caller's business — fold the mask
-    into ``a`` first (see serve/engine.py)."""
+    into ``a`` first (see serve/engine.py).
+
+    ``batch_align`` rounds the batch axis up to a multiple (padded rows
+    gather slot 0 and are sliced off). Alignment is computed from the
+    batch axis *as seen here* — under shard_map that is the per-device
+    batch, so a sharded call pads each shard's remainder only, never the
+    global batch times the device count."""
     interpret = (not on_tpu()) if interpret is None else interpret
+    bsz = x.shape[0]
+    bp = _ceil_to(bsz, batch_align)
+    if bp != bsz:
+        x = _pad_axis(x, 0, bp)
+        idx = _pad_axis(idx, 0, bp)
     r = a.shape[-1]
     rp = _ceil_to(r, 128)  # _pad_rank only handles r < lanes
     if rp != r:
@@ -124,6 +135,8 @@ def bgmv(x, a, b, idx, *, interpret: Optional[bool] = None,
     if op != d_out:
         b = _pad_axis(b, 2, op)
     y = _bgmv(x, a, b, idx, block_n=bn, interpret=interpret)
+    if bp != bsz:
+        y = y[:bsz]
     return y[:, :d_out] if op != d_out else y
 
 
@@ -148,7 +161,8 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=None,
 
 
 def paged_attention(q, k_pool, v_pool, page_tables, lengths, *,
-                    page_size: int, interpret: Optional[bool] = None):
+                    page_size: int, interpret: Optional[bool] = None,
+                    batch_align: int = 1):
     """Paged-attention decode: q (B, H, Dh) one token per row against the
     page-pooled KV (NP, page_size, Hkv, Dh) named by page_tables (B, P).
 
@@ -156,8 +170,19 @@ def paged_attention(q, k_pool, v_pool, page_tables, lengths, *,
     width (zero columns contribute nothing; padding slots are masked by
     the kernel's logical ``page_size``), groups q heads by KV head, and
     slices the result back. Positions >= lengths[b] are masked — see
-    kernels/paged_attn.py for the page-table contract."""
+    kernels/paged_attn.py for the page-table contract.
+
+    ``batch_align`` rounds the row axis up to a multiple (padded rows
+    read at length 0, fully masked, and are sliced off). Computed from
+    the row axis *as seen here* — the per-device rows under shard_map —
+    so sharded calls pad each shard's remainder, not the global batch."""
     interpret = (not on_tpu()) if interpret is None else interpret
+    bsz = q.shape[0]
+    bp = _ceil_to(bsz, batch_align)
+    if bp != bsz:
+        q = _pad_axis(q, 0, bp)
+        page_tables = _pad_axis(page_tables, 0, bp)
+        lengths = _pad_axis(lengths, 0, bp)
     b, h, dh = q.shape
     _, ps, hkv, _ = k_pool.shape
     groups = h // hkv
@@ -176,12 +201,15 @@ def paged_attention(q, k_pool, v_pool, page_tables, lengths, *,
     out = _paged_attn(qg, k_pool, v_pool, page_tables, lengths,
                       page_size=page_size, scale=scale, interpret=interpret)
     out = out.reshape(b, h, dhp)
+    if bp != bsz:
+        out = out[:bsz]
     return out[..., :dh] if dhp != dh else out
 
 
 def paged_verify_attention(q, k_pool, v_pool, page_tables, lengths,
                            q_offsets, *, page_size: int,
-                           interpret: Optional[bool] = None):
+                           interpret: Optional[bool] = None,
+                           batch_align: int = 1):
     """Speculative verify: q (B, Sq, H, Dh) — Sq draft-window tokens per
     row, token i of row b at absolute position q_offsets[b] + i — against
     the page-pooled KV (NP, page_size, Hkv, Dh) named by page_tables
@@ -190,8 +218,16 @@ def paged_verify_attention(q, k_pool, v_pool, page_tables, lengths,
     Pads Dh to the lane width and the slot axis to the sublane width,
     groups q heads by KV head, and slices back — the same padding
     contract as ``paged_attention``, which this generalizes (Sq = 1 with
-    q_offsets = lengths - 1 is plain decode)."""
+    q_offsets = lengths - 1 is plain decode). ``batch_align`` pads the
+    per-shard row axis exactly as in ``paged_attention``."""
     interpret = (not on_tpu()) if interpret is None else interpret
+    bsz = q.shape[0]
+    bp = _ceil_to(bsz, batch_align)
+    if bp != bsz:
+        q = _pad_axis(q, 0, bp)
+        page_tables = _pad_axis(page_tables, 0, bp)
+        lengths = _pad_axis(lengths, 0, bp)
+        q_offsets = _pad_axis(q_offsets, 0, bp)
     b, sq, h, dh = q.shape
     _, ps, hkv, _ = k_pool.shape
     groups = h // hkv
@@ -211,4 +247,6 @@ def paged_verify_attention(q, k_pool, v_pool, page_tables, lengths,
                         q_offsets, page_size=page_size, scale=scale,
                         interpret=interpret)
     out = out.reshape(b, sq, h, dhp)
+    if bp != bsz:
+        out = out[:bsz]
     return out[..., :dh] if dhp != dh else out

@@ -29,9 +29,38 @@ def make_production_mesh(*, multi_pod: bool = False, shape=None):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh():
-    """1-device mesh for CPU tests (same axis names, trivial sizes)."""
-    return jax.make_mesh((1, 1), ("data", "model"))
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Host-CPU mesh with the production axis names at test sizes.
+
+    ``make_host_mesh()`` is the historical 1×1 mesh. Multi-device CPU
+    tests ask for ``make_host_mesh(data=8)`` after forcing placeholder
+    devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (which must be set before the first jax device query) — the same
+    (data, model) axis names the engines shard over on real TPUs, so
+    the shard_map'd hot paths are exercised in tier-1 without hardware."""
+    data, model = int(data), int(model)
+    if data < 1 or model < 1:
+        raise ValueError(f"mesh axes must be >= 1, got data={data} "
+                         f"model={model}")
+    avail = jax.device_count()
+    if data * model > avail:
+        raise ValueError(
+            f"host mesh {data}x{model} needs {data * model} devices but "
+            f"only {avail} exist — set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={data * model} "
+            f"before the first jax call")
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def data_axis_size(mesh) -> int:
+    """Devices along the data axis — the shard count of the engines'
+    batch/row/page-pool axes (pod · data when a pod axis exists)."""
+    if mesh is None:
+        return 1
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return int(n)
 
 
 def fsdp_axes(mesh) -> tuple:

@@ -9,7 +9,8 @@ Rules are name-based over tree paths; anything unmatched is replicated.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+import warnings
+from typing import Any, Optional, Tuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
@@ -35,9 +36,21 @@ def _axis(tag, fsdp):
     return None
 
 
-def _fit(spec: P, shape, mesh) -> P:
+# One-time warning latch: (path, dim, entry) triples already reported.
+# Silent replication cost a debugging session once — a 104B param tree
+# quietly running fully replicated looks exactly like a slow mesh.
+_FIT_WARNED: set = set()
+
+
+def _fit(spec: P, shape, mesh, *, strict: bool = False,
+         path: Optional[str] = None) -> P:
     """Drop sharded axes on dims they don't divide (pjit arguments must
-    shard evenly; e.g. vocab 50280 is not divisible by 16)."""
+    shard evenly; e.g. vocab 50280 is not divisible by 16).
+
+    ``strict=True`` raises instead of silently replicating, naming the
+    offending tree path, dim, and mesh axes; the default path emits a
+    one-time ``UserWarning`` per (path, dim, axes) so a mis-sized mesh
+    is visible without spamming every leaf of a big tree."""
     dims = []
     for i, entry in enumerate(spec):
         if entry is None:
@@ -47,7 +60,24 @@ def _fit(spec: P, shape, mesh) -> P:
         size = 1
         for a in axes:
             size *= mesh.shape[a]
-        dims.append(entry if shape[i] % size == 0 else None)
+        if shape[i] % size == 0:
+            dims.append(entry)
+            continue
+        where = path if path is not None else "<unnamed>"
+        if strict:
+            raise ValueError(
+                f"sharding does not fit: {where!r} dim {i} has size "
+                f"{shape[i]}, not divisible by mesh axes {axes} "
+                f"(= {size} devices)")
+        key = (where, i, axes)
+        if key not in _FIT_WARNED:
+            _FIT_WARNED.add(key)
+            warnings.warn(
+                f"replicating {where!r} dim {i} (size {shape[i]}) — not "
+                f"divisible by mesh axes {axes} (= {size} devices); pass "
+                f"strict=True to make this an error", UserWarning,
+                stacklevel=2)
+        dims.append(None)
     return P(*dims)
 
 
@@ -77,17 +107,19 @@ def _spec_for(path: Tuple[str, ...], leaf, cfg: ModelConfig, fsdp) -> P:
     return P(*((None,) * ndim))
 
 
-def param_pspecs(params, cfg: ModelConfig, mesh):
+def param_pspecs(params, cfg: ModelConfig, mesh, *, strict: bool = False):
     fsdp = fsdp_axes(mesh)
 
     def per_leaf(path, leaf):
         keys = tuple(p.key for p in path if hasattr(p, "key"))
-        return _fit(_spec_for(keys, leaf, cfg, fsdp), leaf.shape, mesh)
+        return _fit(_spec_for(keys, leaf, cfg, fsdp), leaf.shape, mesh,
+                    strict=strict, path="/".join(keys))
 
     return jax.tree_util.tree_map_with_path(per_leaf, params)
 
 
-def batch_pspecs(batch, cfg: ModelConfig, mesh, global_batch: int):
+def batch_pspecs(batch, cfg: ModelConfig, mesh, global_batch: int, *,
+                 strict: bool = False):
     """tokens/labels (B, S) [+ frames (B, S_enc, d)]: shard batch over fsdp
     when divisible, else replicate."""
     fsdp = fsdp_axes(mesh)
@@ -97,13 +129,16 @@ def batch_pspecs(batch, cfg: ModelConfig, mesh, global_batch: int):
     baxis = (fsdp if len(fsdp) > 1 else fsdp[0]) if global_batch % size == 0 \
         else None
 
-    def per_leaf(leaf):
-        return _fit(P(baxis, *((None,) * (leaf.ndim - 1))), leaf.shape, mesh)
+    def per_leaf(path, leaf):
+        keys = "/".join(p.key for p in path if hasattr(p, "key"))
+        return _fit(P(baxis, *((None,) * (leaf.ndim - 1))), leaf.shape,
+                    mesh, strict=strict, path=keys)
 
-    return jax.tree.map(per_leaf, batch)
+    return jax.tree_util.tree_map_with_path(per_leaf, batch)
 
 
-def cache_pspecs(cache, cfg: ModelConfig, mesh, batch: int):
+def cache_pspecs(cache, cfg: ModelConfig, mesh, batch: int, *,
+                 strict: bool = False):
     """KV caches (L,B,S,H,D), pos (L,B,S), ssm state (L,B,H,P,N), conv
     (L,B,W,C). Batch over fsdp when divisible; heads (or seq for MQA)
     over 'model'."""
@@ -137,7 +172,9 @@ def cache_pspecs(cache, cfg: ModelConfig, mesh, batch: int):
         return P(*((None,) * leaf.ndim))
 
     def fitted(path, leaf):
-        return _fit(per_leaf(path, leaf), leaf.shape, mesh)
+        keys = "/".join(p.key for p in path if hasattr(p, "key"))
+        return _fit(per_leaf(path, leaf), leaf.shape, mesh, strict=strict,
+                    path=keys)
 
     return jax.tree_util.tree_map_with_path(fitted, cache)
 
@@ -145,3 +182,49 @@ def cache_pspecs(cache, cfg: ModelConfig, mesh, batch: int):
 def named(tree_specs, mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Engine-state pspec rules (mesh-native serve/agg engines)
+#
+# Both hot paths shard exactly one axis over the data axes and replicate
+# everything else:
+#
+#   aggregation  the (T·L, K, d, r) stacked batch — dim 0 sharded, every
+#                batch item (one target×layer aggregation) device-local;
+#   serving      the request-row axis of tables/tokens/positions/lengths
+#                and the *page* axis of the KV pools (each device owns a
+#                private sub-pool, incl. its own trash page); adapter
+#                slabs and base params are replicated so hot-swap stays a
+#                value-only update with an unchanged sharding.
+# ---------------------------------------------------------------------------
+
+def data_shard_axes(mesh):
+    """The mesh axes the engines shard their batch/row axes over — the
+    same axes FSDP uses (('pod','data') on multi-pod, ('data',) else),
+    as one PartitionSpec entry."""
+    fsdp = fsdp_axes(mesh)
+    return fsdp if len(fsdp) > 1 else fsdp[0]
+
+
+def agg_batch_pspec(mesh, ndim: int) -> P:
+    """Stacked aggregation batch (T·L, K, ...): dim 0 over the data axes."""
+    return P(data_shard_axes(mesh), *((None,) * (ndim - 1)))
+
+
+def replicated_pspec(ndim: int) -> P:
+    """Adapter slabs / base params / eta weights: fully replicated."""
+    return P(*((None,) * ndim))
+
+
+def page_pool_pspec(mesh, ndim: int = 5) -> P:
+    """Paged-KV pools (L, num_shards·(pages+1), ps, Hkv, Dh): the page
+    axis (dim 1) over the data axes — each device holds a private
+    contiguous sub-pool whose page ids are shard-local."""
+    return P(None, data_shard_axes(mesh), *((None,) * (ndim - 2)))
+
+
+def request_pspec(mesh, ndim: int) -> P:
+    """Per-row serve-step inputs/outputs (page tables, slot indices,
+    tokens, positions, lengths, logits): row axis over the data axes."""
+    return P(data_shard_axes(mesh), *((None,) * (ndim - 1)))

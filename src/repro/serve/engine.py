@@ -57,8 +57,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.launch import mesh as mesh_lib
+from repro.launch import sharding as shard_rules
 from repro.models.common import (_act, _repeat_kv, attention, init_kv_cache,
                                  rope, sinusoidal_positions)
 from repro.models.transformer import norm
@@ -292,7 +296,8 @@ class ServeEngine:
                  prefill_chunk: int = 16,
                  drafter=None, spec_k: int = 4,
                  use_pallas: Optional[bool] = None,
-                 cache_dtype=jnp.float32):
+                 cache_dtype=jnp.float32,
+                 mesh=None):
         if cfg.arch_type not in ("dense", "vlm"):
             raise NotImplementedError(
                 f"serving supports the dense transformer family, got "
@@ -308,6 +313,17 @@ class ServeEngine:
                 "draft-verify path")
         if drafter is not None and spec_k < 1:
             raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        self.mesh = mesh
+        self.num_shards = mesh_lib.data_axis_size(mesh)
+        if self.num_shards > 1 and kv_mode != "paged":
+            raise ValueError(
+                "mesh-sharded serving needs the paged KV cache "
+                "(per-device page sub-pools); kv_mode='dense' is "
+                "single-device only")
+        if self.num_shards > 1 and max_batch % self.num_shards:
+            raise ValueError(
+                f"max_batch {max_batch} must divide over the mesh's "
+                f"{self.num_shards} data-axis devices")
         self.params = params
         self.cfg = cfg
         self.registry = registry
@@ -331,11 +347,19 @@ class ServeEngine:
             self.kv = PagedKV(cfg.num_layers, int(num_pages),
                               self.page_size, pages_per_row,
                               self.max_batch, cfg.num_kv_heads,
-                              cfg.resolved_head_dim, dtype=cache_dtype)
+                              cfg.resolved_head_dim, dtype=cache_dtype,
+                              num_shards=self.num_shards)
             self.prefill_chunk = max(1, int(prefill_chunk))
-            self._step = jax.jit(self._paged_step_impl)
-            self._prefill = jax.jit(self._prefill_impl)
-            self._verify = jax.jit(self._verify_impl)
+            if self.num_shards > 1:
+                self._place_state()
+                step, verify, prefill = self._shard_mapped_steps()
+            else:
+                step, verify, prefill = (self._paged_step_impl,
+                                         self._verify_impl,
+                                         self._prefill_impl)
+            self._step = jax.jit(step)
+            self._prefill = jax.jit(prefill)
+            self._verify = jax.jit(verify)
         else:
             self.cache = init_kv_cache(cfg.num_layers, self.max_batch,
                                        self.max_seq, cfg.num_kv_heads,
@@ -376,6 +400,78 @@ class ServeEngine:
         if self.kv_mode == "paged":
             return self.kv.row_capacity()
         return self.max_seq
+
+    # -- mesh plumbing ------------------------------------------------------
+
+    def _place_state(self) -> None:
+        """Commit device placements once at setup: base params and
+        adapter slabs fully replicated, KV pools split on the page axis
+        into per-device sub-pools. Every jitted step's output carries
+        the same shardings, and hot-swap slab writes preserve them — so
+        placement is paid once, not per dispatch, and nothing retraces
+        when adapters or pages churn."""
+        rep = NamedSharding(self.mesh, P())
+        self.params = jax.device_put(self.params, rep)
+        self.registry.place(rep)
+        pool = NamedSharding(self.mesh,
+                             shard_rules.page_pool_pspec(self.mesh))
+        self.kv.pools = jax.device_put(self.kv.pools, pool)
+
+    def _shard_mapped_steps(self):
+        """The three step impls wrapped for the mesh. Row-indexed state
+        (tables/idx/tokens/positions/lengths/logits) splits over the
+        data axes in the same contiguous row blocks ``PagedKV.shard_of``
+        uses; pools split on the page axis; params/slabs replicate.
+        Per-row compute touches nothing across rows, so no collectives —
+        each device runs the identical single-device step on its block
+        (``check_rep=False``: replication inference has no rule for the
+        linalg/gather custom calls inside).
+
+        Prefill is the one replicated-compute step: every device runs
+        the same (1, C) chunk, but only the owner shard's table stack
+        row maps live pages (``PagedKV.prefill_tables``) — the rest
+        write their local trash page and produce discarded logits, and
+        the host slices the owner's block out of the stacked (S·C, V)
+        output."""
+        axes = shard_rules.data_shard_axes(self.mesh)
+
+        def row(ndim):
+            return P(axes, *((None,) * (ndim - 1)))
+
+        rep = P()
+        pool = shard_rules.page_pool_pspec(self.mesh)
+        step = self._wrap_decode_shaped(self._paged_step_impl)
+        verify = shard_map(
+            self._verify_impl, mesh=self.mesh,
+            in_specs=(rep, rep, pool, row(2), row(1), row(2), row(1),
+                      row(1)),
+            out_specs=(row(3), pool), check_rep=False)
+        prefill = shard_map(
+            self._prefill_impl, mesh=self.mesh,
+            in_specs=(rep, rep, pool, row(2), row(1), rep, rep, rep),
+            out_specs=(row(2), pool), check_rep=False)
+        return step, verify, prefill
+
+    def _wrap_decode_shaped(self, impl):
+        """shard_map any decode-step-shaped fn — ``(params, slabs,
+        pools, tables, idx, tokens, pos, lens) -> ((B, V) logits,
+        pools)`` — over the mesh; identity when unsharded. The engine's
+        own decode step and the drafter's shallow draft step both go
+        through here, so they shard identically."""
+        if self.num_shards <= 1:
+            return impl
+        axes = shard_rules.data_shard_axes(self.mesh)
+
+        def row(ndim):
+            return P(axes, *((None,) * (ndim - 1)))
+
+        rep = P()
+        pool = shard_rules.page_pool_pspec(self.mesh)
+        return shard_map(
+            impl, mesh=self.mesh,
+            in_specs=(rep, rep, pool, row(2), row(1), row(2), row(1),
+                      row(1)),
+            out_specs=(row(2), pool), check_rep=False)
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -552,33 +648,43 @@ class ServeEngine:
         admitted = 0
         freed = np.zeros((self.max_batch,), bool)
         any_freed = False
-        for row in range(self.max_batch):
-            if self._rows[row] is None and self._queue:
-                head = self._queue[0]
-                if self.kv_mode == "paged":
-                    # Page-gated admission: cover the prompt plus the
-                    # first generated token; later growth extends.
-                    need = self.kv.pages_for(head["prompt"].size + 1)
-                    if self.kv.allocator.free_count < need:
-                        self.deferrals += 1
-                        break   # FCFS: wait for pages, don't starve head
-                try:
-                    slot = self.registry.acquire(head["adapter"])
-                except RuntimeError:
-                    break   # every slab slot pinned: wait for a release
-                req = self._queue.popleft()
-                req["slot"] = slot
-                self._rows[row] = req
-                admitted += 1
-                if self.kv_mode == "paged":
-                    if not self.kv.admit(row, need):   # free_count said yes
-                        raise RuntimeError(
-                            f"page accounting violated: admission of row "
-                            f"{row} failed after the free-count check")
-                    self._prefill_row(row, req)
-                else:
-                    freed[row] = True
-                    any_freed = True
+        free_rows = [r for r in range(self.max_batch)
+                     if self._rows[r] is None]
+        while self._queue and free_rows:
+            head = self._queue[0]
+            need = 0
+            if self.kv_mode == "paged":
+                # Page-gated admission: cover the prompt plus the first
+                # generated token; later growth extends. A row's pages
+                # come from its own shard's sub-pool, so pick the first
+                # free row whose shard can cover the head (with one
+                # shard this is exactly the old first-free-row scan).
+                need = self.kv.pages_for(head["prompt"].size + 1)
+                row = next((r for r in free_rows
+                            if self.kv.free_count_for(r) >= need), None)
+                if row is None:
+                    self.deferrals += 1
+                    break   # FCFS: wait for pages, don't starve head
+            else:
+                row = free_rows[0]
+            try:
+                slot = self.registry.acquire(head["adapter"])
+            except RuntimeError:
+                break   # every slab slot pinned: wait for a release
+            free_rows.remove(row)
+            req = self._queue.popleft()
+            req["slot"] = slot
+            self._rows[row] = req
+            admitted += 1
+            if self.kv_mode == "paged":
+                if not self.kv.admit(row, need):   # free_count said yes
+                    raise RuntimeError(
+                        f"page accounting violated: admission of row "
+                        f"{row} failed after the free-count check")
+                self._prefill_row(row, req)
+            else:
+                freed[row] = True
+                any_freed = True
         if any_freed:
             self.cache = self._reset(self.cache, jnp.asarray(freed))
         return admitted
@@ -589,7 +695,10 @@ class ServeEngine:
         logit. The row joins the decode batch already past its prompt."""
         prompt = req["prompt"]
         c = self.prefill_chunk
-        idx = jnp.asarray([req["slot"]], jnp.int32)
+        # One idx entry per shard (all the same slot: the gather out of
+        # the replicated slabs is harmless on non-owner shards).
+        idx = jnp.full((self.kv.num_shards,), req["slot"], jnp.int32)
+        own = self.kv.shard_of(row)
         logits = None
         nv = 0
         for lo in range(0, prompt.size, c):
@@ -601,10 +710,13 @@ class ServeEngine:
             toks[0, :nv] = prompt[lo:lo + nv]
             logits, pools = self._prefill(
                 self.params, self.registry.slabs(), self.kv.pools,
-                self.kv.device_tables()[row:row + 1], idx,
+                self.kv.prefill_tables(row), idx,
                 jnp.asarray(toks), np.int32(lo), np.int32(nv))
             self.kv.pools = pools
             self.prefill_calls += 1
+        # Sharded prefill stacks every shard's (C, V) logits; only the
+        # owner shard attended live pages — slice its block.
+        logits = logits[own * c:own * c + c]
         self.prefill_tokens += int(prompt.size)
         first = int(jnp.argmax(logits[nv - 1]))
         req["t"] = int(prompt.size)
@@ -635,13 +747,28 @@ class ServeEngine:
                 continue
             grow = needed - self.kv.allocated(row)
             if not self.kv.extend(row, grow):
-                self.kv.allocator.pin(row)
-                victims = self.kv.allocator.victims(grow)
-                self.kv.allocator.unpin(row)
+                # Preemption is a shard-local affair: the row's pages can
+                # only come from its own sub-pool, so victims do too.
+                alloc = self.kv.allocator_for(row)
+                alloc.pin(row)
+                victims = alloc.victims(grow)
+                alloc.unpin(row)
                 if victims is None:
                     raise RuntimeError(
                         f"KV pool exhausted: row {row} needs {grow} more "
                         f"page(s) and no unpinned row can be preempted")
+                if any(self._rows[int(v)]["t"] >= req["t"]
+                       for v in victims):
+                    # Never tear down a row that is at least as far
+                    # along as the one asking: at exactly-critical
+                    # pressure (e.g. two rows in a 5-page sub-pool) the
+                    # laggard and leader otherwise preempt each other
+                    # forever, neither reaching its final page count.
+                    # Re-queueing the laggard keeps the pool's most-
+                    # advanced row monotone — a global progress
+                    # guarantee, so decode always terminates.
+                    self._preempt(row)
+                    continue
                 for victim in victims:
                     self._preempt(int(victim))
                 if not self.kv.extend(row, grow):  # victims covered grow
@@ -660,7 +787,16 @@ class ServeEngine:
         ``bgmv_groups``."""
         key = np.where(active_mask, idx, np.iinfo(np.int32).max)
         self.bgmv_groups = len(set(idx[active_mask].tolist()))
-        perm = np.argsort(key, kind="stable")
+        if self.kv_mode == "paged" and self.kv.num_shards > 1:
+            # Rows must stay on the shard owning their pages: sort
+            # within each contiguous shard block, never across.
+            rps = self.kv.rows_per_shard
+            perm = np.concatenate([
+                s * rps + np.argsort(key[s * rps:(s + 1) * rps],
+                                     kind="stable")
+                for s in range(self.kv.num_shards)])
+        else:
+            perm = np.argsort(key, kind="stable")
         inv = np.empty_like(perm)
         inv[perm] = np.arange(perm.size)
         return perm, inv
@@ -681,7 +817,7 @@ class ServeEngine:
             # max_new=1): that is progress, not a stall
             if self._queue and admitted == 0:
                 if self.kv_mode == "paged" and \
-                        self.kv.allocator.free_count < self.kv.pages_for(
+                        self.kv.max_free_count() < self.kv.pages_for(
                             self._queue[0]["prompt"].size + 1):
                     # no row active yet pages are missing: pinned by
                     # someone outside this engine

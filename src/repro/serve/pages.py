@@ -182,21 +182,77 @@ class PagedKV:
     The engine threads ``pools`` through its jitted steps and re-assigns
     the result; everything else here is host state. Rows are identified
     by their batch index.
+
+    ``num_shards > 1`` splits the pool into per-device sub-pools for the
+    shard_map'd engine: the page axis becomes ``num_shards`` contiguous
+    blocks of ``pages_per_shard + 1`` pages — each block ending in its
+    own **local trash page** — and page-table entries hold *shard-local*
+    ids in ``[0, pages_per_shard]``. Under shard_map each device sees
+    exactly one block, so local ids index it directly and the trash id
+    is the same constant on every device. Rows map to shards in
+    contiguous blocks (``shard_of``), matching how shard_map splits the
+    batch axis; each shard has its own ``PageAllocator``, so admission
+    and preemption are per-shard decisions the scheduler routes by row.
+    With ``num_shards=1`` everything reduces exactly to the single-pool
+    layout (trash id ``num_pages``, one allocator).
     """
 
     def __init__(self, num_layers: int, num_pages: int, page_size: int,
                  max_pages_per_row: int, max_batch: int, kv_heads: int,
-                 head_dim: int, dtype=jnp.float32):
+                 head_dim: int, dtype=jnp.float32, num_shards: int = 1):
+        self.num_shards = int(num_shards)
+        if self.num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        if num_pages % self.num_shards:
+            raise ValueError(
+                f"num_pages {num_pages} must divide evenly over "
+                f"{self.num_shards} shards")
+        if max_batch % self.num_shards:
+            raise ValueError(
+                f"max_batch {max_batch} must divide evenly over "
+                f"{self.num_shards} shards")
         self.num_pages = int(num_pages)
         self.page_size = int(page_size)
         self.max_pages_per_row = int(max_pages_per_row)
         self.max_batch = int(max_batch)
-        self.trash = self.num_pages          # the sacrificial write target
-        self.pools = init_paged_kv_pool(num_layers, num_pages, page_size,
-                                        kv_heads, head_dim, dtype=dtype)
-        self.allocator = PageAllocator(num_pages)
+        self.pages_per_shard = self.num_pages // self.num_shards
+        self.rows_per_shard = self.max_batch // self.num_shards
+        # Local trash id: last page of each shard's block (== num_pages
+        # when unsharded — the historical layout).
+        self.trash = self.pages_per_shard
+        # Page axis: num_shards * (pages_per_shard + 1) total pages
+        # (init_paged_kv_pool appends one page to whatever it is given).
+        self.pools = init_paged_kv_pool(
+            num_layers, self.num_shards * (self.pages_per_shard + 1) - 1,
+            page_size, kv_heads, head_dim, dtype=dtype)
+        self.allocators = [PageAllocator(self.pages_per_shard)
+                           for _ in range(self.num_shards)]
         self.tables = np.full((max_batch, max_pages_per_row), self.trash,
                               np.int32)
+
+    # -- shard routing --------------------------------------------------------
+
+    @property
+    def allocator(self) -> PageAllocator:
+        """The sole allocator of an unsharded pool (legacy accessor)."""
+        if self.num_shards != 1:
+            raise AttributeError(
+                "PagedKV is sharded: route by row via allocator_for()")
+        return self.allocators[0]
+
+    def shard_of(self, row: int) -> int:
+        """The shard owning a batch row — contiguous row blocks, matching
+        shard_map's split of the batch axis."""
+        return int(row) // self.rows_per_shard
+
+    def allocator_for(self, row: int) -> PageAllocator:
+        return self.allocators[self.shard_of(row)]
+
+    def free_count_for(self, row: int) -> int:
+        return self.allocators[self.shard_of(row)].free_count
+
+    def max_free_count(self) -> int:
+        return max(a.free_count for a in self.allocators)
 
     # -- sizing -------------------------------------------------------------
 
@@ -204,8 +260,10 @@ class PagedKV:
         return -(-int(tokens) // self.page_size)
 
     def row_capacity(self) -> int:
-        """Tokens one row can ever hold (the paged analogue of max_seq)."""
-        return min(self.max_pages_per_row, self.num_pages) * self.page_size
+        """Tokens one row can ever hold (the paged analogue of max_seq) —
+        a row's pages all come from its own shard's sub-pool."""
+        return min(self.max_pages_per_row, self.pages_per_shard) \
+            * self.page_size
 
     def nbytes(self) -> int:
         return sum(int(x.nbytes) for x in jax.tree.leaves(self.pools))
@@ -213,22 +271,23 @@ class PagedKV:
     # -- row lifecycle (mutates the numpy table + allocator only) -----------
 
     def admit(self, row: int, n_pages: int) -> bool:
-        pages = self.allocator.alloc(row, n_pages)
+        pages = self.allocator_for(row).alloc(row, n_pages)
         if pages is None:
             return False
         self.tables[row, :n_pages] = pages
         return True
 
     def extend(self, row: int, n_pages: int = 1) -> bool:
-        held = len(self.allocator.pages_of(row))
-        pages = self.allocator.extend(row, n_pages)
+        alloc = self.allocator_for(row)
+        held = len(alloc.pages_of(row))
+        pages = alloc.extend(row, n_pages)
         if pages is None:
             return False
         self.tables[row, held:held + n_pages] = pages
         return True
 
     def release(self, row: int) -> None:
-        self.allocator.free(row)
+        self.allocator_for(row).free(row)
         self.tables[row, :] = self.trash
 
     def truncate(self, row: int, new_len: int) -> int:
@@ -240,15 +299,28 @@ class PagedKV:
         place as decode proceeds. Returns the number of pages freed."""
         if new_len < 0:
             raise ValueError(f"negative length {new_len}")
+        alloc = self.allocator_for(row)
         keep = min(new_len // self.page_size + 1,
-                   len(self.allocator.pages_of(row)))
-        freed = self.allocator.truncate(row, keep)
+                   len(alloc.pages_of(row)))
+        freed = alloc.truncate(row, keep)
         if freed:
             self.tables[row, keep:keep + len(freed)] = self.trash
         return len(freed)
 
     def allocated(self, row: int) -> int:
-        return len(self.allocator.pages_of(row))
+        return len(self.allocator_for(row).pages_of(row))
 
     def device_tables(self) -> jax.Array:
         return jnp.asarray(self.tables)
+
+    def prefill_tables(self, row: int) -> jax.Array:
+        """The (num_shards, P) table stack a prefill dispatch takes:
+        the owning shard sees the row's real table, every other shard an
+        all-trash row — so under shard_map only the owner writes live
+        pages (the rest land in their local trash page) and only the
+        owner's logits block is meaningful. Unsharded this is exactly
+        ``device_tables()[row:row+1]``."""
+        stack = np.full((self.num_shards, self.max_pages_per_row),
+                        self.trash, np.int32)
+        stack[self.shard_of(row)] = self.tables[row]
+        return jnp.asarray(stack)

@@ -160,6 +160,15 @@ class AdapterRegistry:
             slab["mask"] = slab["mask"].at[:, slot].set(m)
         self.loads += 1
 
+    def place(self, sharding) -> None:
+        """Commit the slab tree to a device placement (e.g. replicated
+        over a mesh via ``NamedSharding(mesh, P())``) — done once at
+        engine setup. Every later hot-swap ``.at[slot].set`` preserves
+        the committed sharding, so adapters keep replicating without
+        per-call transfers and the jit caches never see a layout
+        change."""
+        self._slabs = jax.device_put(self._slabs, sharding)
+
     # -- views --------------------------------------------------------------
 
     def has(self, adapter_id: str) -> bool:

@@ -116,7 +116,10 @@ class SelfDrafter:
                 for kk in pools}
             return logits, new_pools
 
-        self._step = jax.jit(impl)
+        # Same sharding as the engine's own decode step (identity when
+        # the engine is unsharded): the draft reads/writes the same
+        # per-shard page sub-pools through the same row blocks.
+        self._step = jax.jit(engine._wrap_decode_shaped(impl))
         self._engine = engine
 
     def propose(self, engine, active) -> np.ndarray:

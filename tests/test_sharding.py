@@ -25,6 +25,47 @@ def test_fit_drops_nondivisible():
     assert spec == P(("data", "model"), None)
 
 
+def test_fit_strict_raises_with_offending_path_and_axis():
+    m = FakeMesh()
+    with pytest.raises(ValueError, match=(
+            r"'embed' dim 0 has size 50280.*'model'")):
+        _fit(P("model", "data"), (50280, 2560), m, strict=True,
+             path="embed")
+    # strict on a fitting spec stays silent
+    assert _fit(P("data", None), (512, 7), m, strict=True,
+                path="embed") == P("data", None)
+
+
+def test_fit_default_warns_once_per_site():
+    import warnings as warnings_mod
+
+    from repro.launch import sharding as shard_mod
+    m = FakeMesh()
+    shard_mod._FIT_WARNED.clear()
+    with warnings_mod.catch_warnings(record=True) as rec:
+        warnings_mod.simplefilter("always")
+        _fit(P("model", None), (50280, 7), m, path="embed")
+        _fit(P("model", None), (50280, 7), m, path="embed")  # same site
+        _fit(P("model", None), (50280, 7), m, path="head")   # new site
+    msgs = [str(w.message) for w in rec
+            if issubclass(w.category, UserWarning)]
+    assert len(msgs) == 2
+    assert "replicating 'embed' dim 0" in msgs[0]
+    assert "strict=True" in msgs[0]
+    assert "replicating 'head' dim 0" in msgs[1]
+
+
+def test_param_pspecs_strict_raises_on_misfit_tree():
+    cfg = get_config("roberta-large")   # vocab 50265: not divisible by 16
+    params = abstract_params(cfg)
+    with pytest.raises(ValueError, match=r"embed"):
+        param_pspecs(params, cfg, FakeMesh(), strict=True)
+    # the default path still builds the full spec tree (replicating)
+    specs = param_pspecs(params, cfg, FakeMesh())
+    assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)) \
+        == jax.tree.structure(params)
+
+
 def test_param_pspecs_cover_tree():
     cfg = get_config("gemma-2b")
     params = abstract_params(cfg)

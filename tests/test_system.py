@@ -120,6 +120,15 @@ def test_bench_quick_smoke_all_sections(tmp_path):
     assert got["serve"]["spec_forced_exact"] == 1.0
     assert got["serve"]["spec_forced_acceptance"] == 1.0
     assert got["serve"]["spec_forced_speedup_vs_plain"] > 0
+    # the mesh-scaling subsections run in forced-host-device children;
+    # equivalence (bit-identity / byte-exactness vs single-device) is
+    # deterministic and pinned — the speedups are wall-clock, presence
+    # only
+    assert got["fed"]["mesh_agg_bit_identical"] == 1
+    assert got["fed"]["mesh_agg_speedup"] > 0
+    assert got["serve"]["mesh_scaling_exact"] == 1.0
+    assert got["serve"]["mesh_traces_flat"] == 1
+    assert got["serve"]["mesh_tok_per_s_sharded"] > 0
 
 
 def test_bench_merge_preserves_sections_on_failure(tmp_path):
