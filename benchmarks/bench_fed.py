@@ -25,10 +25,11 @@ from typing import Dict
 
 import numpy as np
 
-from benchmarks.common import emit, run_mesh_child
+from benchmarks.common import emit, obs_percentiles, run_mesh_child
 from repro.configs import get_reduced
 from repro.fed import (AsyncConfig, BufferedAsync, FedSession, SemiSync,
                        ServerConfig, SimConfig, SyncRound)
+from repro.obs import MetricsRegistry, Recorder
 from repro.fed.simulation import make_experiment_setup, pretrain_backbone
 
 
@@ -77,10 +78,30 @@ def run(quick: bool = False) -> Dict:
 
     # -- sync (cohort barrier — the paper's mode) ---------------------------
     t0 = time.time()
-    sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"])
+    rec = Recorder()
+    metrics = MetricsRegistry()
+    sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"],
+                      recorder=rec, metrics=metrics)
     h = SyncRound().run(sess, cohort_train, data_fn, sim.rounds,
                         eval_fn=eval_fn)
     _record("sync", h, t0)
+    # recorder-derived round timing + registry-measured wire bytes: the
+    # SAME clock/counters the session records with, not bench timers
+    rs = obs_percentiles(metrics, "fed.round_s", scale=1e3)
+    out["obs_round_ms_p50"] = rs.get("p50", 0.0)
+    out["obs_round_ms_p99"] = rs.get("p99", 0.0)
+    nr = max(sess.rounds_done, 1)
+    out["obs_downlink_bytes_per_round"] = \
+        metrics.counter("fed.downlink_bytes").value / nr
+    out["obs_uplink_bytes_per_round"] = \
+        metrics.counter("fed.uplink_bytes").value / nr
+    out["obs_events"] = len(rec)
+    emit("fed/obs_rounds", rs.get("p50", 0.0) * 1e3,
+         f"round p50={out['obs_round_ms_p50']:.0f}ms "
+         f"p99={out['obs_round_ms_p99']:.0f}ms, bytes/round=down:"
+         f"{out['obs_downlink_bytes_per_round']:.0f}/up:"
+         f"{out['obs_uplink_bytes_per_round']:.0f} "
+         f"({out['obs_events']} trace events)")
 
     # -- semi-sync (deadline straggler cutoff) ------------------------------
     t0 = time.time()

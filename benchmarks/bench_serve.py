@@ -47,9 +47,10 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import emit, run_mesh_child
+from benchmarks.common import emit, obs_percentiles, run_mesh_child
 from repro.configs import get_reduced
 from repro.models import model as model_lib
+from repro.obs import MetricsRegistry, Recorder
 from repro.serve import (AdapterRegistry, NGramDrafter, ScriptedDrafter,
                          ServeEngine)
 from repro.serve.oracle import (factored_greedy, make_demo_adapter,
@@ -88,9 +89,12 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
                  for i in range(n_req)]
     total_tok = n_req * steps
 
+    rec = Recorder()
+    metrics = MetricsRegistry()
     engine = ServeEngine(params, cfg, registry, max_batch=n_req,
                          max_seq=prompt_len + steps, page_size=8,
-                         prefill_chunk=prompt_len)
+                         prefill_chunk=prompt_len,
+                         recorder=rec, metrics=metrics)
 
     def engine_wave():
         uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
@@ -101,12 +105,30 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
         return time.time() - t0, uids, outs
 
     engine_wave()                       # warmup: trace + compile
+    # latency percentiles from the steady-state wave only — drop the
+    # compile wave's observations
+    for h in ("serve.ttft_s", "serve.request_s", "serve.request_tok_s"):
+        metrics.histogram(h).reset()
     t_engine, uids, outs_engine = engine_wave()
     results["engine_tok_per_s"] = total_tok / t_engine
     results["engine_traces"] = engine.trace_count
+    # recorder-derived per-request latency: the SAME clock the engine
+    # records spans with, not a bench-local timer
+    ttft = obs_percentiles(metrics, "serve.ttft_s", scale=1e3)
+    results["obs_ttft_p50_ms"] = ttft.get("p50", 0.0)
+    results["obs_ttft_p99_ms"] = ttft.get("p99", 0.0)
+    rtoks = obs_percentiles(metrics, "serve.request_tok_s")
+    results["obs_req_tok_s_p50"] = rtoks.get("p50", 0.0)
+    results["obs_req_tok_s_p99"] = rtoks.get("p99", 0.0)
+    results["obs_events"] = len(rec)
     emit("serve/engine", t_engine * 1e6 / total_tok,
          f"{results['engine_tok_per_s']:.0f} tok/s over {n_req} req x "
          f"{steps} tok, traces={engine.trace_count}")
+    emit("serve/obs_latency", 0.0,
+         f"ttft p50={results['obs_ttft_p50_ms']:.1f}ms "
+         f"p99={results['obs_ttft_p99_ms']:.1f}ms, per-request tok/s "
+         f"p50={results['obs_req_tok_s_p50']:.0f} "
+         f"({results['obs_events']} trace events)")
 
     # hot-swap one adapter mid-deployment; retraces must stay flat
     traces_before = engine.trace_count

@@ -28,6 +28,35 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
+def obs_percentiles(metrics, name: str, scale: float = 1.0) -> dict:
+    """``{'p50': ..., 'p99': ...}`` from a registry histogram (scaled),
+    ``{}`` when nothing was observed — benches report latency from the
+    same recorder/metrics the engines use, not their own timers."""
+    h = metrics.histogram(name)
+    if not h.count:
+        return {}
+    return {"p50": float(h.percentile(50)) * scale,
+            "p99": float(h.percentile(99)) * scale}
+
+
+def export_trace(recorder, prefix: str) -> dict:
+    """Write ``<prefix>.trace.json`` (Chrome trace-event, perfetto-
+    loadable) + ``<prefix>.events.jsonl`` from a recorder, validating
+    the Chrome document on the way out."""
+    from repro.obs import (validate_chrome_trace, write_chrome_trace,
+                           write_jsonl)
+    d = os.path.dirname(prefix)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    events = recorder.events()
+    trace_path = f"{prefix}.trace.json"
+    jsonl_path = f"{prefix}.events.jsonl"
+    doc = write_chrome_trace(events, trace_path)
+    validate_chrome_trace(doc)
+    n = write_jsonl(events, jsonl_path)
+    return {"trace": trace_path, "jsonl": jsonl_path, "events": n}
+
+
 MESH_RESULT_TAG = "MESH_RESULT "
 
 

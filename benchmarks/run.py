@@ -8,6 +8,7 @@
   serve         bench_serve       — multi-LoRA serving throughput + paged KV
   roofline      bench_roofline    — 3-term roofline from the dry-run
   fed           bench_fed         — FedSession schedulers + measured wire bytes
+  obs           bench_obs         — shared-recorder trace capture + export checks
 
 The ``fed`` and ``serve`` sections each end with a mesh-scaling
 subsection (``mesh_*`` keys): the shard_map'd engine at 1 vs N forced
@@ -43,11 +44,11 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks import (bench_bias, bench_comm, bench_convergence,
-                        bench_fed, bench_roofline, bench_serve,
+                        bench_fed, bench_obs, bench_roofline, bench_serve,
                         bench_server, bench_svd)
 
 ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline",
-       "fed")
+       "fed", "obs")
 
 
 def _run_roofline(args):
@@ -71,6 +72,7 @@ def _runners(args):
     # declaration order == execution order (cheap sections first)
     return {
         "comm": lambda: bench_comm.run(quick=args.quick),
+        "obs": lambda: bench_obs.run(quick=args.quick),
         "svd": lambda: bench_svd.run(quick=args.quick),
         "server": lambda: bench_server.run(quick=args.quick),
         "fed": lambda: bench_fed.run(quick=args.quick),

@@ -23,8 +23,13 @@ multi-token verify dispatch scores the whole window, and rejected
 suffixes roll their KV pages back — same tokens as plain decode, a
 fraction of the dispatches.
 
+The fourth scenario reruns both engine flavours with event recording on
+and exports the shared timeline as a perfetto-loadable Chrome trace plus
+a JSONL event archive (see ``src/repro/obs``).
+
   PYTHONPATH=src python examples/serve_adapters.py
 """
+import os
 import time
 
 import jax
@@ -32,6 +37,8 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import model as model_lib
+from repro.obs import (MetricsRegistry, Recorder, validate_chrome_trace,
+                       write_chrome_trace, write_jsonl)
 from repro.serve import AdapterRegistry, ScriptedDrafter, ServeEngine
 from repro.serve.oracle import make_demo_adapter, merged_greedy
 
@@ -197,7 +204,66 @@ def speculative():
           f"byte-identical to plain: {exact}/{num_req}")
 
 
+def observability():
+    """Record a full serving timeline and export it for perfetto.
+
+    Two engines share ONE recorder, each under its own track prefix: a
+    plain engine squeezed through a deliberately small page pool (so the
+    trace shows deferrals, preemptions, and replays alongside the
+    prefill/decode spans) and a speculative engine replaying the first
+    engine's answers through draft–verify (draft and verify spans on its
+    engine track). The result drops straight into ``ui.perfetto.dev``:
+
+      results/serve_trace.json    Chrome trace-event JSON (validated)
+      results/serve_events.jsonl  lossless per-event archive
+    """
+    cfg, key, params, ranks, adapters, registry = _fixture()
+    rec = Recorder()
+    metrics = MetricsRegistry()
+
+    # plain engine, tight pool: 8 req x 24 tok through 10 pages of 4
+    engine = ServeEngine(params, cfg, registry, max_batch=8,
+                         max_seq=PROMPT_LEN + STEPS, page_size=4,
+                         num_pages=10, prefill_chunk=4,
+                         recorder=rec, metrics=metrics, name="serve")
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 7), (8, PROMPT_LEN), 3, cfg.vocab_size))
+    uids = [engine.submit(prompts[i], f"client{i % len(ranks)}",
+                          max_new_tokens=STEPS) for i in range(8)]
+    outs = engine.run()
+
+    # spec engine on the SAME recorder: replay those answers as drafts
+    drafter = ScriptedDrafter()
+    spec = ServeEngine(params, cfg, registry, max_batch=4,
+                       max_seq=PROMPT_LEN + STEPS, drafter=drafter,
+                       spec_k=4, recorder=rec, metrics=metrics,
+                       name="spec")
+    for i in range(4):
+        u = spec.submit(prompts[i], f"client{i % len(ranks)}",
+                        max_new_tokens=STEPS)
+        drafter.set(u, outs[uids[i]])
+    spec.run()
+
+    os.makedirs("results", exist_ok=True)
+    doc = write_chrome_trace(rec.events(), "results/serve_trace.json")
+    counts = validate_chrome_trace(doc)
+    n = write_jsonl(rec.events(), "results/serve_events.jsonl")
+    names = {e[1] for e in rec.events()}
+    covered = [s for s in ("prefill_chunk", "decode_step", "draft",
+                           "verify_step", "preempt", "replay", "defer")
+               if s in names]
+    print(f"\nobservability: {n} events ({counts['X']} spans) on "
+          f"{len({e[2] for e in rec.events()})} tracks -> "
+          f"results/serve_trace.json (drop into ui.perfetto.dev)")
+    print(f"  span/instant coverage: {', '.join(covered)}")
+    print(f"  {engine.preemptions} preemptions, {engine.deferrals} "
+          f"deferrals visible in-trace; spec acceptance "
+          f"{spec.accepted_tokens / max(spec.drafted_tokens, 1):.2f}")
+    print(metrics.summary_text("  -- metrics --"))
+
+
 if __name__ == "__main__":
     main()
     oversubscribed()
     speculative()
+    observability()

@@ -72,18 +72,29 @@ class SyncRound(Scheduler):
         history: Dict[str, List] = {
             "round": [], "train_loss": [], "eval_acc": [], "eval_loss": [],
             "downlink_bytes": [], "uplink_bytes": []}
+        rec = session.rec
         for i in range(num_rounds):
             rnd = session.rounds_done
+            t_rnd = rec.now() if rec.enabled else 0.0
             cohort = session.sample_cohort()
             stacked, heads = session.broadcast_cohort(cohort)
             factors, masks = split_adapters(stacked)
             trainable = {"factors": factors, "head": heads}
+            t_tr = rec.now() if rec.enabled else 0.0
             trainable, losses = train(session.base, trainable, masks,
                                       data_fn(cohort, rnd))
+            if rec.enabled:
+                rec.complete("train", "fed.train", t_tr, rec.now(),
+                             round=rnd, cohort=len(cohort))
             tree, up_heads = session.collect_updates(
                 cohort, join_adapters(trainable["factors"], masks),
                 trainable["head"])
             session.aggregate_round(tree, cohort, stacked_heads=up_heads)
+            if rec.enabled:
+                t1 = rec.now()
+                rec.complete(f"round{rnd}", "fed.rounds", t_rnd, t1,
+                             cohort=len(cohort))
+                session.metrics.histogram("fed.round_s").observe(t1 - t_rnd)
             history["round"].append(rnd)
             history["train_loss"].append(float(jnp.mean(losses)))
             history["downlink_bytes"].append(session.comm_log["downlink"][-1])
@@ -116,18 +127,28 @@ class SemiSync(Scheduler):
             "round": [], "train_loss": [], "eval_acc": [], "eval_loss": [],
             "downlink_bytes": [], "uplink_bytes": [], "stragglers": [],
             "round_time": []}
+        rec = session.rec
         for i in range(num_rounds):
             rnd = session.rounds_done
+            t_rnd = rec.now() if rec.enabled else 0.0
             cohort = session.sample_cohort()
             durations = 1.0 / speeds[cohort]
             keep = durations <= deadline
             if not keep.any():                 # never stall a round
                 keep[np.argmin(durations)] = True
+            if rec.enabled and not keep.all():
+                rec.instant("deadline_cut", "fed.rounds", round=rnd,
+                            stragglers=int((~keep).sum()),
+                            deadline=deadline)
             stacked, heads = session.broadcast_cohort(cohort)
             factors, masks = split_adapters(stacked)
             trainable = {"factors": factors, "head": heads}
+            t_tr = rec.now() if rec.enabled else 0.0
             trainable, losses = train(session.base, trainable, masks,
                                       data_fn(cohort, rnd))
+            if rec.enabled:
+                rec.complete("train", "fed.train", t_tr, rec.now(),
+                             round=rnd, cohort=len(cohort))
             trained = join_adapters(trainable["factors"], masks)
             idx = np.flatnonzero(keep)
             sub_tree = {t: {leaf: ad[leaf][idx]
@@ -145,12 +166,23 @@ class SemiSync(Scheduler):
             history["downlink_bytes"].append(session.comm_log["downlink"][-1])
             history["uplink_bytes"].append(session.comm_log["uplink"][-1])
             history["stragglers"].append(int((~keep).sum()))
+            session.metrics.counter("fed.stragglers").inc(
+                int((~keep).sum()))
             # the server closes the round when every survivor is in: at
             # durations.max() if nobody was cut, else at the deadline —
             # unless the force-kept fastest itself finishes after it
-            history["round_time"].append(
-                float(durations.max()) if keep.all()
-                else float(max(deadline, durations[keep].max())))
+            round_time = (float(durations.max()) if keep.all()
+                          else float(max(deadline, durations[keep].max())))
+            history["round_time"].append(round_time)
+            # simulated time, no clock read: always on
+            session.metrics.histogram("fed.round_time_sim").observe(
+                round_time)
+            if rec.enabled:
+                t1 = rec.now()
+                rec.complete(f"round{rnd}", "fed.rounds", t_rnd, t1,
+                             cohort=len(cohort),
+                             stragglers=int((~keep).sum()))
+                session.metrics.histogram("fed.round_s").observe(t1 - t_rnd)
             _eval_round(history, session, eval_fn,
                         rnd % eval_every == 0 or i == num_rounds - 1)
         return history
@@ -213,12 +245,22 @@ class BufferedAsync(Scheduler):
             history["flush_events"].append(len(buffer))
             buffer.clear()
 
+        rec = session.rec
         for step in range(num_events):
             t_now, cid, ver = heapq.heappop(heap)
             factors, masks = split_adapters(pending[cid])
             trainable = {"factors": factors, "head": session.global_head}
+            t_tr = rec.now() if rec.enabled else 0.0
             trained, _loss = local_train(session.base, trainable, masks,
                                          data_fn(cid))
+            if rec.enabled:
+                # one track per client: training bursts and arrivals
+                # line up against the server's flush spans
+                track = f"fed.client{cid}"
+                rec.complete("train", track, t_tr, rec.now(),
+                             version=int(ver), t_sim=float(t_now))
+                rec.instant("update_arrival", track, version=int(ver),
+                            staleness=int(session.version - ver))
             buffer.append(session.make_update(
                 cid, join_adapters(trained["factors"], masks), ver,
                 head=trained["head"]))

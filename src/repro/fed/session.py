@@ -49,6 +49,7 @@ from repro.core import rank as rank_lib
 from repro.fed import messages as msg_lib
 from repro.fed import strategies as strat_lib
 from repro.models import transformer as tf_lib
+from repro.obs import NULL_RECORDER, MetricsRegistry
 
 
 @dataclass
@@ -111,7 +112,9 @@ class FedSession:
                  strategy=None,
                  acfg: Optional[AsyncConfig] = None,
                  track_comm: bool = True,
-                 mesh=None):
+                 mesh=None,
+                 recorder=None,
+                 metrics: Optional[MetricsRegistry] = None):
         from repro.fed.client import split_head
         self.cfg = cfg
         self.scfg = scfg
@@ -158,6 +161,22 @@ class FedSession:
         # Measured wire bytes, one entry per broadcast_cohort /
         # collect_updates / make_update / adapter_for call.
         self.comm_log: Dict[str, List[int]] = {"downlink": [], "uplink": []}
+        # Observability: recorder defaults to the no-op singleton;
+        # metrics are always on. Server-side phases record on the
+        # "fed.server" track (schedulers put rounds and client training
+        # on their own tracks, so no track ever nests spans).
+        self.rec = recorder if recorder is not None else NULL_RECORDER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+
+    def _log_comm(self, direction: str, nbytes: int) -> None:
+        """The one comm accounting choke point: the historical per-call
+        ``comm_log`` rows, a registry byte counter, and (recording on) a
+        wire-traffic counter sample on the shared timeline."""
+        self.comm_log[direction].append(nbytes)
+        self.metrics.counter(f"fed.{direction}_bytes").inc(int(nbytes))
+        if self.rec.enabled:
+            self.rec.counter_sample(f"fed.{direction}_bytes", "fed.wire",
+                                    int(nbytes))
 
     # -- cohort handling ----------------------------------------------------
 
@@ -256,23 +275,24 @@ class FedSession:
         redistribution — masked directions are exactly zero), logging the
         measured downlink bytes.
         """
-        stacked = self.redistribute(cohort)
-        if not self.track_comm:
-            self.comm_log["downlink"].append(0)
-            return stacked, self.cohort_heads(cohort)
-        r_max = self.cfg.lora.r_max
-        per_client, heads, total = [], [], 0
-        for i, cid in enumerate(cohort):
-            sl = {t: {"A": ad["A"][i], "B": ad["B"][i]}
-                  for t, ad in stacked.items()}
-            wire = msg_lib.Broadcast.from_bytes(
-                self.make_broadcast(cid, sl).to_bytes())
-            total += wire.num_bytes
-            tree, head = wire.unpack(r_max)
-            per_client.append(tree)
-            heads.append(head)
-        self.comm_log["downlink"].append(total)
-        return self._stack_clients(per_client, heads)
+        with self.rec.span("broadcast", "fed.server", cohort=len(cohort)):
+            stacked = self.redistribute(cohort)
+            if not self.track_comm:
+                self._log_comm("downlink", 0)
+                return stacked, self.cohort_heads(cohort)
+            r_max = self.cfg.lora.r_max
+            per_client, heads, total = [], [], 0
+            for i, cid in enumerate(cohort):
+                sl = {t: {"A": ad["A"][i], "B": ad["B"][i]}
+                      for t, ad in stacked.items()}
+                wire = msg_lib.Broadcast.from_bytes(
+                    self.make_broadcast(cid, sl).to_bytes())
+                total += wire.num_bytes
+                tree, head = wire.unpack(r_max)
+                per_client.append(tree)
+                heads.append(head)
+            self._log_comm("downlink", total)
+            return self._stack_clients(per_client, heads)
 
     def adapter_for(self, cid: int) -> Tuple[Dict, int]:
         """Async client-facing broadcast: rank-r_k truncation of the
@@ -284,7 +304,7 @@ class FedSession:
         if self.track_comm:
             wire = msg_lib.Broadcast.from_bytes(
                 self.make_broadcast(cid, sl).to_bytes())
-            self.comm_log["downlink"].append(wire.num_bytes)
+            self._log_comm("downlink", wire.num_bytes)
             tree, _head = wire.unpack(self.cfg.lora.r_max)
             return tree, self.version
         return sl, self.version
@@ -306,8 +326,8 @@ class FedSession:
         # num_bytes serializes lazily — only measure when tracking, so
         # track_comm=False skips the buffer build here too
         if log:
-            self.comm_log["uplink"].append(upd.num_bytes
-                                           if self.track_comm else 0)
+            self._log_comm("uplink", upd.num_bytes
+                           if self.track_comm else 0)
         return upd
 
     def collect_updates(self, cohort: np.ndarray, trained_tree: Dict,
@@ -317,27 +337,28 @@ class FedSession:
         round), returning the re-stacked tree+heads ready for
         :meth:`aggregate_round`. Bit-exact: gradients cannot flow into
         masked directions, so truncation loses nothing."""
-        if not self.track_comm:
-            self.comm_log["uplink"].append(0)
-            return trained_tree, trained_heads
-        r_max = self.cfg.lora.r_max
-        per_client, heads, total = [], [], 0
-        for i, cid in enumerate(cohort):
-            sl = {t: {leaf: ad[leaf][i] for leaf in ("A", "B", "mask")}
-                  for t, ad in trained_tree.items()}
-            h = None if trained_heads is None else \
-                {k: v[i] for k, v in trained_heads.items()}
-            upd = msg_lib.ClientUpdate.from_bytes(
-                self.make_update(cid, sl, self.version, h,
-                                 log=False).to_bytes())
-            total += upd.num_bytes
-            tree, head = upd.unpack(r_max)
-            per_client.append(tree)
-            heads.append(head)
-        self.comm_log["uplink"].append(total)
-        out, heads_st = self._stack_clients(per_client, heads)
-        return out, (heads_st or None) if trained_heads is not None \
-            else None
+        with self.rec.span("collect", "fed.server", cohort=len(cohort)):
+            if not self.track_comm:
+                self._log_comm("uplink", 0)
+                return trained_tree, trained_heads
+            r_max = self.cfg.lora.r_max
+            per_client, heads, total = [], [], 0
+            for i, cid in enumerate(cohort):
+                sl = {t: {leaf: ad[leaf][i] for leaf in ("A", "B", "mask")}
+                      for t, ad in trained_tree.items()}
+                h = None if trained_heads is None else \
+                    {k: v[i] for k, v in trained_heads.items()}
+                upd = msg_lib.ClientUpdate.from_bytes(
+                    self.make_update(cid, sl, self.version, h,
+                                     log=False).to_bytes())
+                total += upd.num_bytes
+                tree, head = upd.unpack(r_max)
+                per_client.append(tree)
+                heads.append(head)
+            self._log_comm("uplink", total)
+            out, heads_st = self._stack_clients(per_client, heads)
+            return out, (heads_st or None) if trained_heads is not None \
+                else None
 
     # -- aggregation ---------------------------------------------------------
 
@@ -348,25 +369,29 @@ class FedSession:
         redistribution happens lazily in ``redistribute``. Task heads are
         FedAvg'd with the same cohort weights under every strategy, so the
         comparison isolates the adapter aggregation."""
-        eta = self.cohort_weights(cohort)
-        if stacked_heads:
-            self.global_head = jax.tree.map(
-                lambda x: jnp.tensordot(eta, x.astype(jnp.float32),
-                                        axes=1).astype(x.dtype),
-                stacked_heads)
-        full = {t: jnp.ones_like(ad["mask"][:1])
-                for t, ad in stacked_trained.items()}
-        out, spectra = self.engine(
-            stacked_trained, eta, self.cfg.lora.alpha,
-            **self.strategy.engine_kwargs(), new_masks=full,
-            key=jax.random.PRNGKey(int(self.rng.integers(2 ** 31))))
-        self.global_lora = {
-            t: {"A": ad["A"][0], "B": ad["B"][0], "mask": ad["mask"][0]}
-            for t, ad in out.items()}
-        self.last_spectrum = spectra if self.strategy.has_spectrum else None
-        if self.scfg.rank_policy == "spectrum":
-            self.adapt_ranks()
-        self.rounds_done += 1
+        with self.rec.span("aggregate", "fed.server", cohort=len(cohort),
+                           round=self.rounds_done):
+            eta = self.cohort_weights(cohort)
+            if stacked_heads:
+                self.global_head = jax.tree.map(
+                    lambda x: jnp.tensordot(eta, x.astype(jnp.float32),
+                                            axes=1).astype(x.dtype),
+                    stacked_heads)
+            full = {t: jnp.ones_like(ad["mask"][:1])
+                    for t, ad in stacked_trained.items()}
+            out, spectra = self.engine(
+                stacked_trained, eta, self.cfg.lora.alpha,
+                **self.strategy.engine_kwargs(), new_masks=full,
+                key=jax.random.PRNGKey(int(self.rng.integers(2 ** 31))))
+            self.global_lora = {
+                t: {"A": ad["A"][0], "B": ad["B"][0], "mask": ad["mask"][0]}
+                for t, ad in out.items()}
+            self.last_spectrum = spectra if self.strategy.has_spectrum \
+                else None
+            if self.scfg.rank_policy == "spectrum":
+                self.adapt_ranks()
+            self.rounds_done += 1
+            self.metrics.counter("fed.rounds").inc()
 
     def flush_async(self, updates: Sequence) -> List[bool]:
         """Buffered asynchronous merge: fold K client updates into the
@@ -390,11 +415,22 @@ class FedSession:
         """
         taus = [self.version - int(u.start_version) for u in updates]
         self.staleness_log.extend(taus)
+        stale_h = self.metrics.histogram("fed.staleness")
+        for tau in taus:
+            stale_h.observe(tau)
         keep = [i for i, tau in enumerate(taus)
                 if tau <= self.acfg.max_staleness]
         flags = [i in keep for i in range(len(updates))]
+        self.metrics.counter("fed.updates_merged").inc(len(keep))
+        self.metrics.counter("fed.updates_dropped").inc(
+            len(taus) - len(keep))
         if not keep:
             return flags
+        with self.rec.span("flush", "fed.server", merged=len(keep),
+                           version=self.version):
+            return self._flush_merge(updates, taus, keep, flags)
+
+    def _flush_merge(self, updates, taus, keep, flags) -> List[bool]:
         survivors = [updates[i] for i in keep]
         n = np.asarray([max(int(u.num_examples), 1) for u in survivors],
                        np.float64)

@@ -1,0 +1,41 @@
+"""Unified observability layer: event recorder, metrics registry, exporters.
+
+See ``src/repro/obs/README.md`` for the event model and exporter formats.
+"""
+from repro.obs.recorder import (
+    Event,
+    NULL_RECORDER,
+    NullRecorder,
+    Recorder,
+)
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    percentile,
+)
+from repro.obs.export import (
+    chrome_trace,
+    read_jsonl,
+    validate_chrome_trace,
+    write_chrome_trace,
+    write_jsonl,
+)
+
+__all__ = [
+    "Event",
+    "NULL_RECORDER",
+    "NullRecorder",
+    "Recorder",
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "percentile",
+    "chrome_trace",
+    "read_jsonl",
+    "validate_chrome_trace",
+    "write_chrome_trace",
+    "write_jsonl",
+]

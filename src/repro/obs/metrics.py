@@ -1,0 +1,183 @@
+"""Metrics registry: counters, gauges, and percentile histograms.
+
+Where the :mod:`repro.obs.recorder` answers *when did things happen*,
+this module answers *how much / how fast overall* — the always-on half
+of the observability layer. A counter increment is one Python int add,
+so the engines keep their metrics on even when event recording is off;
+everything that needs a clock read (latency histograms) is still gated
+behind ``recorder.enabled`` by the instrumented call sites.
+
+The registry is also the consolidation point for the ad-hoc counters the
+serve/fed stacks grew (``ServeEngine.trace_count``, ``spec_stats``,
+per-allocator debug prints): the public attributes survive as thin
+property views over registry counters (see ``ServeEngine``), so existing
+tests and benchmarks read identical values while exporters see one
+namespace.
+
+Naming: dotted lowercase paths (``serve.traces``, ``fed.uplink_bytes``,
+``pages.shard0.free``). ``as_dict()``/``summary_text()`` flatten the
+whole registry for JSON export or human reading.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+
+class Counter:
+    """Monotonically-growing (but settable, for view semantics) int."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def set(self, v) -> None:
+        self.value = v
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 100]) over a non-empty sequence."""
+    if not values:
+        raise ValueError("percentile of an empty sequence")
+    xs = sorted(values)
+    if p <= 0:
+        return float(xs[0])
+    rank = math.ceil(p / 100.0 * len(xs))
+    return float(xs[min(rank, len(xs)) - 1])
+
+
+class Histogram:
+    """Bounded-memory distribution summary.
+
+    Keeps the most recent ``window`` observations for percentile queries
+    (a ring, so long runs see *recent* behaviour, not the warmup) while
+    ``count``/``total``/``vmin``/``vmax`` cover the full lifetime.
+    """
+
+    __slots__ = ("name", "count", "total", "vmin", "vmax", "_window")
+
+    def __init__(self, name: str, window: int = 65536):
+        if window <= 0:
+            raise ValueError(f"window must be positive, got {window}")
+        self.name = name
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+        self._window: deque = deque(maxlen=int(window))
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+        self._window.append(v)
+
+    def reset(self) -> None:
+        """Drop all observations (e.g. to exclude a warmup phase)."""
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+        self._window.clear()
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, p: float) -> float:
+        return percentile(self._window, p)
+
+    def summary(self) -> Dict[str, float]:
+        if not self.count:
+            return {"count": 0}
+        return {"count": self.count, "mean": self.mean,
+                "min": self.vmin, "max": self.vmax,
+                "p50": self.percentile(50), "p90": self.percentile(90),
+                "p99": self.percentile(99)}
+
+
+class MetricsRegistry:
+    """Get-or-create namespace of counters / gauges / histograms."""
+
+    def __init__(self):
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        c = self._counters.get(name)
+        if c is None:
+            c = self._counters[name] = Counter(name)
+        return c
+
+    def gauge(self, name: str) -> Gauge:
+        g = self._gauges.get(name)
+        if g is None:
+            g = self._gauges[name] = Gauge(name)
+        return g
+
+    def histogram(self, name: str, window: int = 65536) -> Histogram:
+        h = self._histograms.get(name)
+        if h is None:
+            h = self._histograms[name] = Histogram(name, window)
+        return h
+
+    def has(self, name: str) -> bool:
+        return (name in self._counters or name in self._gauges
+                or name in self._histograms)
+
+    # -- export -------------------------------------------------------------
+
+    def as_dict(self) -> Dict[str, object]:
+        """Flat {name: value-or-summary} snapshot (JSON-serializable)."""
+        out: Dict[str, object] = {}
+        for name, c in self._counters.items():
+            out[name] = c.value
+        for name, g in self._gauges.items():
+            out[name] = g.value
+        for name, h in self._histograms.items():
+            out[name] = h.summary()
+        return out
+
+    def summary_text(self, title: Optional[str] = None) -> str:
+        """Aligned human-readable dump (the text exporter)."""
+        lines: List[str] = []
+        if title:
+            lines.append(title)
+            lines.append("-" * len(title))
+        scalars = {**{n: c.value for n, c in sorted(self._counters.items())},
+                   **{n: g.value for n, g in sorted(self._gauges.items())}}
+        if scalars:
+            w = max(len(n) for n in scalars)
+            for n, v in sorted(scalars.items()):
+                lines.append(f"{n:<{w}}  {v}")
+        for n, h in sorted(self._histograms.items()):
+            s = h.summary()
+            if not s["count"]:
+                lines.append(f"{n}  (empty)")
+                continue
+            lines.append(
+                f"{n}  n={s['count']} mean={s['mean']:.6g} "
+                f"p50={s['p50']:.6g} p90={s['p90']:.6g} "
+                f"p99={s['p99']:.6g} max={s['max']:.6g}")
+        return "\n".join(lines)

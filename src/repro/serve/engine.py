@@ -66,7 +66,38 @@ from repro.launch import sharding as shard_rules
 from repro.models.common import (_act, _repeat_kv, attention, init_kv_cache,
                                  rope, sinusoidal_positions)
 from repro.models.transformer import norm
+from repro.obs import NULL_RECORDER, MetricsRegistry
 from repro.serve.pages import PagedKV
+
+
+def _counter_view(suffix: str):
+    """Property exposing a registry counter as a plain int attribute.
+
+    The engine's historical counters (``trace_count``, ``steps``, ...)
+    stay readable/writable exactly as before — including the
+    ``self.trace_count += 1`` side effects that fire at trace time
+    inside the jitted bodies — while the values live in the metrics
+    registry where exporters and benches read them. Metric names are
+    prefixed by the engine's ``name`` (``serve.traces`` by default), so
+    engines sharing one registry keep disjoint namespaces — and one
+    engine's ``__init__`` zeroing its counters cannot wipe another's."""
+    def _get(self):
+        return self.metrics.counter(f"{self.name}.{suffix}").value
+
+    def _set(self, v):
+        self.metrics.counter(f"{self.name}.{suffix}").value = int(v)
+
+    return property(_get, _set)
+
+
+def _gauge_view(suffix: str):
+    def _get(self):
+        return self.metrics.gauge(f"{self.name}.{suffix}").value
+
+    def _set(self, v):
+        self.metrics.gauge(f"{self.name}.{suffix}").set(int(v))
+
+    return property(_get, _set)
 
 
 def _apply_slab_lora(x, w0, slab, idx, alpha, use_pallas: bool):
@@ -297,7 +328,9 @@ class ServeEngine:
                  drafter=None, spec_k: int = 4,
                  use_pallas: Optional[bool] = None,
                  cache_dtype=jnp.float32,
-                 mesh=None):
+                 mesh=None,
+                 recorder=None, metrics: Optional[MetricsRegistry] = None,
+                 name: str = "serve"):
         if cfg.arch_type not in ("dense", "vlm"):
             raise NotImplementedError(
                 f"serving supports the dense transformer family, got "
@@ -336,6 +369,13 @@ class ServeEngine:
             from repro.kernels import ops
             use_pallas = ops.on_tpu()
         self.use_pallas = bool(use_pallas)
+        # Observability: ``rec`` defaults to the no-op singleton (hot
+        # paths guard clock reads with ``if rec.enabled:``); ``metrics``
+        # is always on — counter views below write through to it.
+        self.rec = recorder if recorder is not None else NULL_RECORDER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.name = str(name)
+        self._engine_track = f"{self.name}/engine"
         self.trace_count = 0
         if kv_mode == "paged":
             self.page_size = int(page_size)
@@ -348,7 +388,9 @@ class ServeEngine:
                               self.page_size, pages_per_row,
                               self.max_batch, cfg.num_kv_heads,
                               cfg.resolved_head_dim, dtype=cache_dtype,
-                              num_shards=self.num_shards)
+                              num_shards=self.num_shards,
+                              metrics=self.metrics,
+                              name=f"{self.name}.pages")
             self.prefill_chunk = max(1, int(prefill_chunk))
             if self.num_shards > 1:
                 self._place_state()
@@ -386,6 +428,36 @@ class ServeEngine:
         # dispatch — rows are sorted/grouped by slot before the BGMV
         # gather (the first move toward SGMV tile reuse)
         self.bgmv_groups = 0
+
+    # The historical public counters, consolidated onto the metrics
+    # registry as thin views (``spec_stats`` and every existing caller
+    # read identical values through these).
+    trace_count = _counter_view("traces")
+    steps = _counter_view("steps")
+    tokens_generated = _counter_view("tokens")
+    prefill_calls = _counter_view("prefill_calls")
+    prefill_tokens = _counter_view("prefill_tokens")
+    deferrals = _counter_view("deferrals")
+    preemptions = _counter_view("preemptions")
+    spec_dispatches = _counter_view("spec.dispatches")
+    drafted_tokens = _counter_view("spec.drafted")
+    accepted_tokens = _counter_view("spec.accepted")
+    rollback_pages = _counter_view("spec.rollback_pages")
+    bgmv_groups = _gauge_view("bgmv_groups")
+
+    # -- request tracks ------------------------------------------------------
+
+    def _track(self, req: dict) -> str:
+        return f"{self.name}/{req['uid']}"
+
+    def _note_first_token(self, req: dict) -> None:
+        """First generated token: derive TTFT against the submit stamp."""
+        if "_ts" not in req or "_ttft" in req:
+            return
+        t = self.rec.now()
+        req["_ttft"] = t - req["_ts"]
+        self.metrics.histogram(f"{self.name}.ttft_s").observe(req["_ttft"])
+        self.rec.instant("first_token", self._track(req))
 
     # -- introspection ------------------------------------------------------
 
@@ -619,9 +691,16 @@ class ServeEngine:
             raise KeyError(f"unknown adapter {adapter_id!r}")
         uid = f"req{self._uid}"
         self._uid += 1
-        self._queue.append({"uid": uid, "prompt": prompt, "out": [],
-                            "t": 0, "max_new": int(max_new_tokens),
-                            "adapter": adapter_id})
+        req = {"uid": uid, "prompt": prompt, "out": [],
+               "t": 0, "max_new": int(max_new_tokens),
+               "adapter": adapter_id}
+        if self.rec.enabled:
+            req["_ts"] = self.rec.now()
+            self.rec.instant("submit", self._track(req),
+                             prompt=int(prompt.size),
+                             max_new=int(max_new_tokens),
+                             adapter=adapter_id)
+        self._queue.append(req)
         return uid
 
     def _finish(self, row: int, req: dict) -> None:
@@ -630,6 +709,16 @@ class ServeEngine:
         if self.kv_mode == "paged":
             self.kv.release(row)
         self._rows[row] = None
+        if self.rec.enabled and "_ts" in req:
+            dur = self.rec.now() - req["_ts"]
+            self.metrics.histogram(f"{self.name}.request_s").observe(dur)
+            if dur > 0:
+                self.metrics.histogram(
+                    f"{self.name}.request_tok_s").observe(
+                    len(req["out"]) / dur)
+            self.rec.instant("finish", self._track(req),
+                             tokens=len(req["out"]),
+                             replays=req.get("_replays", 0))
 
     def _preempt(self, row: int) -> None:
         """Evict a row: free its pages + adapter pin and replay the
@@ -637,12 +726,21 @@ class ServeEngine:
         the re-run reproduces the same tokens)."""
         req = self._rows[row]
         self.registry.release(req["adapter"])
+        pages_freed = self.kv.allocated(row)
         self.kv.release(row)
         req.update(t=0, out=[])
         req.pop("slot", None)
+        # Replay accounting makes preemption visible outside debug
+        # prints: a per-request counter plus a trace instant.
+        req["_replays"] = req.get("_replays", 0) + 1
+        if self.rec.enabled:
+            self.rec.instant("preempt", self._track(req),
+                             pages_freed=int(pages_freed))
         self._queue.appendleft(req)
         self._rows[row] = None
         self.preemptions += 1
+        self.metrics.counter(
+            f"{self.name}.replay_pages").inc(int(pages_freed))
 
     def _admit(self) -> int:
         admitted = 0
@@ -664,6 +762,9 @@ class ServeEngine:
                             if self.kv.free_count_for(r) >= need), None)
                 if row is None:
                     self.deferrals += 1
+                    if self.rec.enabled:
+                        self.rec.instant("defer", self._track(head),
+                                         need_pages=int(need))
                     break   # FCFS: wait for pages, don't starve head
             else:
                 row = free_rows[0]
@@ -676,6 +777,10 @@ class ServeEngine:
             req["slot"] = slot
             self._rows[row] = req
             admitted += 1
+            if self.rec.enabled:
+                self.rec.instant(
+                    "replay" if req.get("_replays") else "admit",
+                    self._track(req), row=int(row))
             if self.kv_mode == "paged":
                 if not self.kv.admit(row, need):   # free_count said yes
                     raise RuntimeError(
@@ -701,6 +806,7 @@ class ServeEngine:
         own = self.kv.shard_of(row)
         logits = None
         nv = 0
+        rec = self.rec
         for lo in range(0, prompt.size, c):
             nv = min(c, prompt.size - lo)
             # Fresh buffer every chunk: device_put can alias numpy memory
@@ -708,10 +814,15 @@ class ServeEngine:
             # reading it asynchronously — mutating in place races.
             toks = np.zeros((1, c), np.int32)
             toks[0, :nv] = prompt[lo:lo + nv]
-            logits, pools = self._prefill(
-                self.params, self.registry.slabs(), self.kv.pools,
-                self.kv.prefill_tables(row), idx,
-                jnp.asarray(toks), np.int32(lo), np.int32(nv))
+            t0 = rec.now() if rec.enabled else 0.0
+            with rec.annotation("serve.prefill_chunk"):
+                logits, pools = self._prefill(
+                    self.params, self.registry.slabs(), self.kv.pools,
+                    self.kv.prefill_tables(row), idx,
+                    jnp.asarray(toks), np.int32(lo), np.int32(nv))
+            if rec.enabled:
+                rec.complete("prefill_chunk", self._track(req), t0,
+                             rec.now(), pos0=int(lo), tokens=int(nv))
             self.kv.pools = pools
             self.prefill_calls += 1
         # Sharded prefill stacks every shard's (C, V) logits; only the
@@ -722,6 +833,8 @@ class ServeEngine:
         req["t"] = int(prompt.size)
         req["out"] = [first]
         self.tokens_generated += 1
+        if rec.enabled:
+            self._note_first_token(req)
         if len(req["out"]) >= req["max_new"]:
             self._finish(row, req)
 
@@ -775,6 +888,9 @@ class ServeEngine:
                     raise RuntimeError(
                         f"page accounting violated: row {row} cannot "
                         f"extend by {grow} page(s) after preemption")
+            if self.rec.enabled:
+                self.rec.instant("extend", self._track(req),
+                                 pages=int(grow))
 
     def _slot_order(self, idx: np.ndarray, active_mask: np.ndarray):
         """Stable permutation grouping batch rows by adapter slot
@@ -849,25 +965,39 @@ class ServeEngine:
             pos[i] = t
             idx[i] = req["slot"]
             lens[i] = t + 1
+        rec = self.rec
+        t0 = rec.now() if rec.enabled else 0.0
         if self.kv_mode == "paged":
             perm, inv = self._slot_order(idx, lens > 0)
-            logits, self.kv.pools = self._step(
-                self.params, self.registry.slabs(), self.kv.pools,
-                jnp.asarray(self.kv.tables[perm]), jnp.asarray(idx[perm]),
-                jnp.asarray(tokens[perm]), jnp.asarray(pos[perm]),
-                jnp.asarray(lens[perm]))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)[inv]
+            with rec.annotation("serve.decode_step"):
+                logits, self.kv.pools = self._step(
+                    self.params, self.registry.slabs(), self.kv.pools,
+                    jnp.asarray(self.kv.tables[perm]),
+                    jnp.asarray(idx[perm]), jnp.asarray(tokens[perm]),
+                    jnp.asarray(pos[perm]), jnp.asarray(lens[perm]))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)[inv]
         else:
-            logits, self.cache = self._step(
-                self.params, self.registry.slabs(), self.cache,
-                jnp.asarray(idx), jnp.asarray(tokens), jnp.asarray(pos))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            with rec.annotation("serve.decode_step"):
+                logits, self.cache = self._step(
+                    self.params, self.registry.slabs(), self.cache,
+                    jnp.asarray(idx), jnp.asarray(tokens), jnp.asarray(pos))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if rec.enabled:
+            # the argmax harvest above blocked on the logits, so this
+            # span is a true step latency (host + device)
+            t1 = rec.now()
+            rec.complete("decode_step", self._engine_track, t0, t1,
+                         batch=len(active))
+            self.metrics.histogram(
+                f"{self.name}.decode_step_s").observe(t1 - t0)
         self.steps += 1
         for i, req in active:
             req["t"] += 1
             if req["t"] >= req["prompt"].size:       # past prefill: sample
                 req["out"].append(int(nxt[i]))
                 self.tokens_generated += 1
+                if rec.enabled:
+                    self._note_first_token(req)
             if len(req["out"]) >= req["max_new"]:    # finished: recycle row
                 self._finish(i, req)
 
@@ -900,12 +1030,21 @@ class ServeEngine:
             pos0[i] = req["t"]
             idx[i] = req["slot"]
         perm, inv = self._slot_order(idx, nv > 0)
-        logits, self.kv.pools = self._verify(
-            self.params, self.registry.slabs(), self.kv.pools,
-            jnp.asarray(self.kv.tables[perm]), jnp.asarray(idx[perm]),
-            jnp.asarray(tokens[perm]), jnp.asarray(pos0[perm]),
-            jnp.asarray(nv[perm]))
-        greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)[inv]
+        rec = self.rec
+        t0 = rec.now() if rec.enabled else 0.0
+        with rec.annotation("serve.verify_step"):
+            logits, self.kv.pools = self._verify(
+                self.params, self.registry.slabs(), self.kv.pools,
+                jnp.asarray(self.kv.tables[perm]), jnp.asarray(idx[perm]),
+                jnp.asarray(tokens[perm]), jnp.asarray(pos0[perm]),
+                jnp.asarray(nv[perm]))
+            greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)[inv]
+        if rec.enabled:
+            t1 = rec.now()
+            rec.complete("verify_step", self._engine_track, t0, t1,
+                         batch=len(active))
+            self.metrics.histogram(
+                f"{self.name}.decode_step_s").observe(t1 - t0)
         self.steps += 1
         self.spec_dispatches += 1
         for i, req in active:

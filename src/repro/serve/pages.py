@@ -48,15 +48,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import init_paged_kv_pool
+from repro.obs import MetricsRegistry
 
 
 class PageAllocator:
-    """Free-list page allocator with ownership, pinning, and victim scan."""
+    """Free-list page allocator with ownership, pinning, and victim scan.
 
-    def __init__(self, num_pages: int):
+    Occupancy is observable through the metrics registry: gauges
+    ``{name}.free`` / ``{name}.owners`` / ``{name}.pinned`` track the
+    live state after every mutation, counters ``{name}.allocs`` /
+    ``{name}.extends`` / ``{name}.freed`` / ``{name}.truncated`` count
+    page traffic — so page churn (admission, growth, preemption-replay
+    reclaim, rollback) shows up in exports instead of debug prints.
+    """
+
+    def __init__(self, num_pages: int, *,
+                 metrics: Optional[MetricsRegistry] = None,
+                 name: str = "pages"):
         if num_pages <= 0:
             raise ValueError(f"num_pages must be positive, got {num_pages}")
         self.num_pages = int(num_pages)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.name = str(name)
         # Stack of free ids; low ids come off first (cosmetic, not load-
         # bearing: correctness only needs disjointness).
         self._free: List[int] = list(range(self.num_pages - 1, -1, -1))
@@ -64,6 +77,13 @@ class PageAllocator:
         self._pinned: set = set()
         self._clock = 0
         self._born: Dict[Hashable, int] = {}   # owner -> admission order
+        self._sync()
+
+    def _sync(self) -> None:
+        m, n = self.metrics, self.name
+        m.gauge(f"{n}.free").set(len(self._free))
+        m.gauge(f"{n}.owners").set(len(self._owned))
+        m.gauge(f"{n}.pinned").set(len(self._pinned))
 
     # -- core ---------------------------------------------------------------
 
@@ -91,6 +111,8 @@ class PageAllocator:
         self._owned[owner] = pages
         self._born[owner] = self._clock
         self._clock += 1
+        self.metrics.counter(f"{self.name}.allocs").inc(n)
+        self._sync()
         return pages
 
     def extend(self, owner: Hashable, n: int = 1) -> Optional[List[int]]:
@@ -102,6 +124,8 @@ class PageAllocator:
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._owned[owner].extend(pages)
+        self.metrics.counter(f"{self.name}.extends").inc(n)
+        self._sync()
         return pages
 
     def free(self, owner: Hashable) -> List[int]:
@@ -110,6 +134,8 @@ class PageAllocator:
         self._born.pop(owner, None)
         self._pinned.discard(owner)
         self._free.extend(pages)
+        self.metrics.counter(f"{self.name}.freed").inc(len(pages))
+        self._sync()
         return pages
 
     def truncate(self, owner: Hashable, keep: int) -> List[int]:
@@ -129,6 +155,8 @@ class PageAllocator:
         freed = pages[keep:]
         del pages[keep:]
         self._free.extend(freed)
+        self.metrics.counter(f"{self.name}.truncated").inc(len(freed))
+        self._sync()
         return freed
 
     # -- pinning / preemption -----------------------------------------------
@@ -139,9 +167,11 @@ class PageAllocator:
         if owner not in self._owned:
             raise KeyError(f"unknown owner {owner!r}")
         self._pinned.add(owner)
+        self._sync()
 
     def unpin(self, owner: Hashable) -> None:
         self._pinned.discard(owner)
+        self._sync()
 
     def pinned(self, owner: Hashable) -> bool:
         return owner in self._pinned
@@ -199,7 +229,9 @@ class PagedKV:
 
     def __init__(self, num_layers: int, num_pages: int, page_size: int,
                  max_pages_per_row: int, max_batch: int, kv_heads: int,
-                 head_dim: int, dtype=jnp.float32, num_shards: int = 1):
+                 head_dim: int, dtype=jnp.float32, num_shards: int = 1,
+                 metrics: Optional[MetricsRegistry] = None,
+                 name: str = "pages"):
         self.num_shards = int(num_shards)
         if self.num_shards < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
@@ -225,8 +257,12 @@ class PagedKV:
         self.pools = init_paged_kv_pool(
             num_layers, self.num_shards * (self.pages_per_shard + 1) - 1,
             page_size, kv_heads, head_dim, dtype=dtype)
-        self.allocators = [PageAllocator(self.pages_per_shard)
-                           for _ in range(self.num_shards)]
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.name = str(name)
+        self.allocators = [PageAllocator(self.pages_per_shard,
+                                         metrics=self.metrics,
+                                         name=f"{self.name}.shard{i}")
+                           for i in range(self.num_shards)]
         self.tables = np.full((max_batch, max_pages_per_row), self.trash,
                               np.int32)
 

@@ -1,0 +1,460 @@
+"""Observability layer tests: recorder semantics, exporter schema, and
+the serve/fed instrumentation contracts.
+
+Three layers under test:
+
+* ``repro.obs`` in isolation — recorder ring/clock semantics, the no-op
+  null recorder, percentile/histogram math, JSONL round-trip, and the
+  Chrome trace-event schema golden (``validate_chrome_trace`` over a
+  synthetic document AND a real recorded run).
+* The serve engine recorded end-to-end under page pressure — span
+  coverage (prefill/decode/preempt/replay), TTFT/latency histograms,
+  thin-view counter consistency (``trace_count`` & friends ARE registry
+  counters now), page-allocator gauges, and — crucially — recording
+  adding ZERO retraces (the paged engine still traces exactly twice).
+* A ``FedSession`` recorded through broadcast → collect → aggregate →
+  async flush — server spans in order, measured wire-byte counters
+  matching ``comm_log``, and staleness accounting on the flush path.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.fed import AsyncConfig, FedSession, ServerConfig
+from repro.models import model as model_lib
+from repro.obs import (NULL_RECORDER, Histogram, MetricsRegistry,
+                       NullRecorder, Recorder, chrome_trace, percentile,
+                       read_jsonl, validate_chrome_trace, write_jsonl)
+from repro.serve import AdapterRegistry, ServeEngine
+from repro.serve.oracle import make_demo_adapter, merged_greedy
+
+RANKS = (2, 4, 6, 8)
+PROMPT_LEN = 6
+STEPS = 10
+PAGED_TRACES = 2   # one prefill trace + one decode trace (same as seed)
+
+
+# ---------------------------------------------------------------------------
+# recorder + metrics in isolation
+# ---------------------------------------------------------------------------
+
+def test_recorder_event_model():
+    rec = Recorder()
+    assert rec.enabled
+    t0 = rec.now()
+    rec.instant("mark", "trk", x=1)
+    rec.complete("work", "trk", t0, rec.now(), n=2)
+    with rec.span("outer", "other"):
+        pass
+    rec.counter_sample("bytes", "wire", 128)
+    kinds = [e[0] for e in rec.events()]
+    assert kinds == ["i", "X", "X", "C"]
+    for kind, name, track, ts, dur, args in rec.events():
+        assert isinstance(ts, float) and dur >= 0.0
+    # counter samples carry {series: value} args
+    assert rec.events()[-1][5] == {"bytes": 128}
+    assert len(rec) == 4 and rec.appended == 4 and rec.dropped == 0
+    rec.clear()
+    assert len(rec) == 0 and rec.appended == 0
+
+
+def test_recorder_ring_drops_oldest():
+    rec = Recorder(capacity=4)
+    for i in range(6):
+        rec.instant(f"e{i}", "t")
+    assert len(rec) == 4
+    assert rec.appended == 6 and rec.dropped == 2
+    assert [e[1] for e in rec.events()] == ["e2", "e3", "e4", "e5"]
+    with pytest.raises(ValueError):
+        Recorder(capacity=0)
+
+
+def test_null_recorder_is_a_true_noop():
+    assert isinstance(NULL_RECORDER, NullRecorder)
+    assert not NULL_RECORDER.enabled
+    NULL_RECORDER.instant("a", "t")
+    NULL_RECORDER.complete("b", "t", 0.0, 1.0)
+    NULL_RECORDER.counter_sample("c", "t", 1)
+    with NULL_RECORDER.span("d", "t"):
+        pass
+    with NULL_RECORDER.annotation("e"):
+        pass
+    assert len(NULL_RECORDER) == 0 and NULL_RECORDER.events() == []
+    assert NULL_RECORDER.dropped == 0
+
+
+def test_percentile_nearest_rank():
+    xs = list(range(1, 101))          # 1..100
+    assert percentile(xs, 50) == 50
+    assert percentile(xs, 99) == 99
+    assert percentile(xs, 100) == 100
+    assert percentile(xs, 0) == 1
+    assert percentile([7.0], 99) == 7.0
+    with pytest.raises(ValueError):
+        percentile([], 50)
+
+
+def test_histogram_window_and_reset():
+    h = Histogram("h", window=8)
+    for v in range(100):
+        h.observe(v)
+    # lifetime stats cover everything; percentiles only the last window
+    assert h.count == 100 and h.vmin == 0 and h.vmax == 99
+    assert h.percentile(0) == 92.0     # window holds 92..99
+    s = h.summary()
+    assert s["count"] == 100 and s["p50"] == 95.0   # rank 4 of 92..99
+    h.reset()
+    assert h.count == 0 and h.summary() == {"count": 0}
+
+
+def test_registry_get_or_create_and_export():
+    m = MetricsRegistry()
+    m.counter("a.c").inc(3)
+    m.counter("a.c").inc()            # same object
+    m.gauge("a.g").set(7)
+    m.histogram("a.h").observe(1.5)
+    assert m.has("a.c") and not m.has("nope")
+    d = m.as_dict()
+    assert d["a.c"] == 4 and d["a.g"] == 7 and d["a.h"]["count"] == 1
+    text = m.summary_text("t")
+    assert "a.c" in text and "a.h" in text
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event schema golden (synthetic)
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_schema_and_overlap_detection():
+    rec = Recorder()
+    t = rec.now()
+    rec.complete("s1", "trk", t, t + 0.010)
+    rec.complete("s2", "trk", t + 0.011, t + 0.020)
+    rec.instant("i1", "trk")
+    rec.counter_sample("series", "wire", 5)
+    doc = chrome_trace(rec.events(), process_name="p")
+    counts = validate_chrome_trace(doc)
+    assert counts == {"X": 2, "i": 1, "C": 1, "M": 3}
+    evs = doc["traceEvents"]
+    # metadata rows: process name + one thread row per distinct track
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert {m["args"]["name"] for m in meta} == {"p", "trk", "wire"}
+    # earliest event is the time origin; everything is non-negative µs
+    assert min(e["ts"] for e in evs if e["ph"] != "M") == 0.0
+    # overlapping spans on one track must be rejected
+    bad = Recorder()
+    t = bad.now()
+    bad.complete("a", "trk", t, t + 0.010)
+    bad.complete("b", "trk", t + 0.005, t + 0.008)   # starts inside a
+    with pytest.raises(AssertionError, match="overlap"):
+        validate_chrome_trace(chrome_trace(bad.events()))
+
+
+def test_jsonl_roundtrip(tmp_path):
+    rec = Recorder()
+    t = rec.now()
+    rec.complete("s", "trk", t, t + 0.001, n=3, label="x")
+    rec.instant("i", "trk")
+    rec.counter_sample("c", "wire", 9)
+    path = str(tmp_path / "events.jsonl")
+    assert write_jsonl(rec.events(), path) == 3
+    assert read_jsonl(path) == rec.events()
+
+
+# ---------------------------------------------------------------------------
+# serve engine, recorded end-to-end under page pressure
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    cfg = get_reduced("gemma-2b")
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(key, cfg)
+    adapters = {
+        f"client{i}": make_demo_adapter(jax.random.fold_in(key, 100 + i),
+                                        cfg, r)
+        for i, r in enumerate(RANKS)}
+    prompts = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 3), (8, PROMPT_LEN), 3, cfg.vocab_size))
+    return cfg, params, adapters, prompts
+
+
+@pytest.fixture(scope="module")
+def recorded(serve_setup):
+    """One recorded run, shared by the serve-side assertions below:
+    8 requests squeezed through a 10-page pool (deferrals + preemptions
+    guaranteed) with event recording on."""
+    cfg, params, adapters, prompts = serve_setup
+    reg = AdapterRegistry(cfg, capacity=len(adapters))
+    for aid, tree in adapters.items():
+        reg.register(aid, tree)
+    rec = Recorder()
+    metrics = MetricsRegistry()
+    engine = ServeEngine(params, cfg, reg, max_batch=8,
+                         max_seq=PROMPT_LEN + STEPS, page_size=4,
+                         num_pages=10, prefill_chunk=4,
+                         recorder=rec, metrics=metrics)
+    uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
+                          max_new_tokens=STEPS) for i in range(8)]
+    outs = engine.run()
+    return engine, rec, metrics, uids, outs
+
+
+def test_recording_adds_zero_retraces_and_keeps_tokens_exact(
+        serve_setup, recorded):
+    cfg, params, adapters, prompts = serve_setup
+    engine, rec, _, uids, outs = recorded
+    assert engine.trace_count == PAGED_TRACES   # same constant as seed
+    assert len(rec) > 0 and rec.dropped == 0
+    for i, uid in enumerate(uids):
+        want = merged_greedy(params, cfg, prompts[i],
+                             adapters[f"client{i % len(RANKS)}"], STEPS)
+        np.testing.assert_array_equal(outs[uid], want)
+
+
+def test_recorded_run_exports_valid_chrome_trace(recorded):
+    """The golden test the ISSUE pins: a real engine run's trace is
+    valid trace-event JSON with monotone non-overlapping spans per
+    track."""
+    engine, rec, _, uids, _ = recorded
+    doc = chrome_trace(rec.events())
+    counts = validate_chrome_trace(doc)
+    assert counts["X"] > 0 and counts["i"] > 0
+    names = {e[1] for e in rec.events()}
+    for want in ("submit", "admit", "prefill_chunk", "first_token",
+                 "decode_step", "finish", "defer", "preempt", "replay"):
+        assert want in names, f"missing {want!r} in the recorded trace"
+    # one track per request plus the engine track
+    tracks = {e[2] for e in rec.events()}
+    assert f"{engine.name}/engine" in tracks
+    for uid in uids:
+        assert f"{engine.name}/{uid}" in tracks
+
+
+def test_engine_counters_are_registry_views(recorded):
+    """spec_stats()/trace_count/steps read THROUGH the registry: the
+    public attributes and the metrics namespace can never disagree."""
+    engine, _, metrics, _, _ = recorded
+    views = {"traces": engine.trace_count, "steps": engine.steps,
+             "tokens": engine.tokens_generated,
+             "prefill_calls": engine.prefill_calls,
+             "prefill_tokens": engine.prefill_tokens,
+             "deferrals": engine.deferrals,
+             "preemptions": engine.preemptions,
+             "spec.dispatches": engine.spec_dispatches,
+             "spec.drafted": engine.drafted_tokens,
+             "spec.accepted": engine.accepted_tokens,
+             "spec.rollback_pages": engine.rollback_pages}
+    for suffix, attr_value in views.items():
+        assert attr_value == metrics.counter(f"serve.{suffix}").value
+    assert engine.bgmv_groups == metrics.gauge("serve.bgmv_groups").value
+    stats = engine.spec_stats()
+    assert stats["dispatches"] == engine.spec_dispatches
+    # writable views still work (trace-time `self.trace_count += 1`)
+    engine.trace_count += 1
+    assert metrics.counter("serve.traces").value == PAGED_TRACES + 1
+    engine.trace_count -= 1
+
+
+def test_latency_histograms_and_ttft(recorded):
+    engine, _, metrics, uids, _ = recorded
+    ttft = metrics.histogram("serve.ttft_s")
+    assert ttft.count == len(uids)        # one first token per request
+    assert ttft.vmin > 0
+    assert metrics.histogram("serve.request_s").count == len(uids)
+    steps = metrics.histogram("serve.decode_step_s")
+    assert steps.count == engine.steps
+    s = steps.summary()
+    assert 0 < s["p50"] <= s["p99"] <= s["max"]
+
+
+def test_preemption_and_replay_are_visible(recorded):
+    """The fixed invisibility: preempted requests leave preempt/replay
+    instants, a replay-page counter, and per-request replay counts on
+    their finish events."""
+    engine, rec, metrics, _, _ = recorded
+    assert engine.preemptions > 0 and engine.deferrals > 0
+    events = rec.events()
+    preempts = [e for e in events if e[1] == "preempt"]
+    replays = [e for e in events if e[1] == "replay"]
+    assert len(preempts) == engine.preemptions
+    assert len(replays) == engine.preemptions   # every victim re-admits
+    assert all(e[5]["pages_freed"] > 0 for e in preempts)
+    assert metrics.counter("serve.replay_pages").value == sum(
+        e[5]["pages_freed"] for e in preempts)
+    finishes = [e for e in events if e[1] == "finish"]
+    assert sum(e[5]["replays"] for e in finishes) == engine.preemptions
+
+
+def test_page_allocator_gauges_and_conservation(recorded):
+    engine, _, metrics, _, _ = recorded
+    n = f"{engine.name}.pages.shard0"
+    # drained pool: every page back on the free list, nothing owned
+    assert metrics.gauge(f"{n}.free").value == engine.kv.pages_per_shard
+    assert metrics.gauge(f"{n}.owners").value == 0
+    assert metrics.gauge(f"{n}.pinned").value == 0
+    allocs = metrics.counter(f"{n}.allocs").value
+    extends = metrics.counter(f"{n}.extends").value
+    freed = metrics.counter(f"{n}.freed").value
+    truncated = metrics.counter(f"{n}.truncated").value
+    assert allocs > 0 and extends > 0
+    assert allocs + extends == freed + truncated   # page conservation
+
+
+def test_default_engine_records_nothing(serve_setup):
+    """No recorder passed => the no-op singleton, zero clock coupling."""
+    cfg, params, adapters, prompts = serve_setup
+    reg = AdapterRegistry(cfg, capacity=len(adapters))
+    for aid, tree in adapters.items():
+        reg.register(aid, tree)
+    engine = ServeEngine(params, cfg, reg, max_batch=2,
+                         max_seq=PROMPT_LEN + 2)
+    assert engine.rec is NULL_RECORDER
+    uid = engine.submit(prompts[0], "client0", max_new_tokens=2)
+    outs = engine.run()
+    assert len(NULL_RECORDER) == 0
+    assert engine.trace_count == PAGED_TRACES
+    # no recorder => no timing state stamped into requests
+    assert metricsless_histograms_empty(engine)
+    assert outs[uid].size == 2
+
+
+def metricsless_histograms_empty(engine) -> bool:
+    for h in ("ttft_s", "request_s", "request_tok_s", "decode_step_s"):
+        if engine.metrics.histogram(f"serve.{h}").count:
+            return False
+    return True
+
+
+def test_two_engines_share_a_registry_without_clobbering(serve_setup):
+    """Distinct engine names => disjoint metric namespaces: the second
+    engine's construction must not zero the first engine's counters."""
+    cfg, params, adapters, prompts = serve_setup
+    reg = AdapterRegistry(cfg, capacity=len(adapters))
+    for aid, tree in adapters.items():
+        reg.register(aid, tree)
+    metrics = MetricsRegistry()
+    a = ServeEngine(params, cfg, reg, max_batch=2, max_seq=PROMPT_LEN + 2,
+                    metrics=metrics, name="a")
+    a.submit(prompts[0], "client0", max_new_tokens=2)
+    a.run()
+    steps_a = a.steps
+    assert steps_a > 0
+    b = ServeEngine(params, cfg, reg, max_batch=2, max_seq=PROMPT_LEN + 2,
+                    metrics=metrics, name="b")
+    assert a.steps == steps_a          # b's __init__ zeroed only b.*
+    assert b.steps == 0
+    assert metrics.counter("a.steps").value == steps_a
+
+
+# ---------------------------------------------------------------------------
+# fed session, recorded through a server round + async flush
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def fed_recorded():
+    """A recorded server-side round (broadcast -> collect -> aggregate)
+    plus an async flush with a forced-stale update."""
+    cfg = get_reduced("roberta-large")
+    scfg = ServerConfig(num_clients=4, clients_per_round=2,
+                        strategy="hlora", rank_policy="random",
+                        r_min=2, r_max=8, seed=0)
+    base = model_lib.init_params(jax.random.PRNGKey(1), cfg)
+    rec = Recorder()
+    metrics = MetricsRegistry()
+    sess = FedSession(cfg, scfg, base, recorder=rec, metrics=metrics,
+                      acfg=AsyncConfig(max_staleness=2))
+    cohort = sess.sample_cohort()
+    stacked, heads = sess.broadcast_cohort(cohort)
+    tree, up_heads = sess.collect_updates(cohort, stacked,
+                                          heads if heads else None)
+    sess.aggregate_round(tree, cohort, stacked_heads=up_heads)
+
+    # async flush: one fresh update, one too stale (its start_version
+    # predates a 5-merge jump in the server version)
+    sl = {t: {k: np.asarray(v) for k, v in ad.items()}
+          for t, ad in sess.global_lora.items()}
+    stale = sess.make_update(1, sl, sess.version)
+    sess.version += 5                       # stale's tau becomes 5 > 2
+    fresh = sess.make_update(0, sl, sess.version)
+    flags = sess.flush_async([fresh, stale])
+    return sess, rec, metrics, cohort, flags
+
+
+def test_fed_server_spans_in_order(fed_recorded):
+    sess, rec, _, cohort, _ = fed_recorded
+    server = [e for e in rec.events()
+              if e[2] == "fed.server" and e[0] == "X"]
+    names = [e[1] for e in server]
+    assert names == ["broadcast", "collect", "aggregate", "flush"]
+    # sequential host code: already-sorted, non-overlapping
+    for (_, _, _, a0, ad, _), (_, _, _, b0, _, _) in zip(server,
+                                                         server[1:]):
+        assert b0 >= a0 + ad
+    assert server[0][5]["cohort"] == len(cohort)
+    validate_chrome_trace(chrome_trace(rec.events()))
+
+
+def test_fed_wire_bytes_counter_matches_comm_log(fed_recorded):
+    sess, rec, metrics, _, _ = fed_recorded
+    assert metrics.counter("fed.downlink_bytes").value == \
+        sum(sess.comm_log["downlink"]) > 0
+    assert metrics.counter("fed.uplink_bytes").value == \
+        sum(sess.comm_log["uplink"]) > 0
+    wire = [e for e in rec.events() if e[2] == "fed.wire"]
+    assert wire and all(e[0] == "C" for e in wire)
+    assert sum(e[5].get("fed.downlink_bytes", 0) for e in wire) == \
+        sum(sess.comm_log["downlink"])
+    assert metrics.counter("fed.rounds").value == sess.rounds_done == 1
+
+
+def test_fed_flush_staleness_accounting(fed_recorded):
+    sess, rec, metrics, _, flags = fed_recorded
+    assert flags == [True, False]           # fresh merged, stale dropped
+    assert metrics.counter("fed.updates_merged").value == 1
+    assert metrics.counter("fed.updates_dropped").value == 1
+    stale_h = metrics.histogram("fed.staleness")
+    assert stale_h.count == 2 and stale_h.vmax == 5
+    flush = [e for e in rec.events() if e[1] == "flush"]
+    assert len(flush) == 1 and flush[0][5]["merged"] == 1
+
+
+def test_fed_default_session_records_nothing():
+    cfg = get_reduced("roberta-large")
+    scfg = ServerConfig(num_clients=2, clients_per_round=2, seed=0)
+    base = model_lib.init_params(jax.random.PRNGKey(2), cfg)
+    sess = FedSession(cfg, scfg, base)
+    assert sess.rec is NULL_RECORDER
+    sess.broadcast_cohort(np.array([0, 1]))
+    assert len(NULL_RECORDER) == 0
+    # metrics stay on regardless: wire bytes still counted
+    assert sess.metrics.counter("fed.downlink_bytes").value == \
+        sum(sess.comm_log["downlink"]) > 0
+
+
+# ---------------------------------------------------------------------------
+# clock-discipline lint: obs owns the clock inside serve + fed
+# ---------------------------------------------------------------------------
+
+def test_no_raw_clock_reads_in_serve_or_fed():
+    """``time.perf_counter()``/``time.time()`` inside repro/serve or
+    repro/fed would fork the timeline off the recorder's shared clock —
+    every timestamp there must come from ``Recorder.now()``."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "src", "repro")
+    offenders = []
+    for sub in ("serve", "fed"):
+        for dirpath, _, files in os.walk(os.path.join(root, sub)):
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path) as f:
+                    src = f.read()
+                if "time.perf_counter(" in src or "time.time(" in src:
+                    offenders.append(os.path.relpath(path, root))
+    assert not offenders, (
+        f"raw clock reads outside repro.obs: {offenders} — record "
+        f"through Recorder.now() / span() instead")

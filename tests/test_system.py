@@ -129,6 +129,16 @@ def test_bench_quick_smoke_all_sections(tmp_path):
     assert got["serve"]["mesh_scaling_exact"] == 1.0
     assert got["serve"]["mesh_traces_flat"] == 1
     assert got["serve"]["mesh_tok_per_s_sharded"] > 0
+    # the observability section: trace export validated, JSONL round-
+    # tripped, and the promised span names present (all deterministic);
+    # recorder-derived latency percentiles are wall-clock, presence only
+    assert got["obs"]["obs_jsonl_roundtrip"] == 1
+    assert got["obs"]["obs_span_names_ok"] == 1
+    assert got["obs"]["obs_events"] > 0 and got["obs"]["obs_tracks"] > 0
+    assert got["serve"]["obs_ttft_p99_ms"] > 0
+    assert got["serve"]["obs_req_tok_s_p50"] > 0
+    assert got["fed"]["obs_round_ms_p50"] > 0
+    assert got["fed"]["obs_downlink_bytes_per_round"] > 0
 
 
 def test_bench_merge_preserves_sections_on_failure(tmp_path):
