@@ -91,14 +91,20 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
 
     rec = Recorder()
     metrics = MetricsRegistry()
+    # SLO classes are observe-only: generous ceilings a tiny host-CPU
+    # model clears deterministically, so attainment publishes at 1.0 —
+    # the point is the per-class accounting path, not a perf gate
     engine = ServeEngine(params, cfg, registry, max_batch=n_req,
                          max_seq=prompt_len + steps, page_size=8,
                          prefill_chunk=prompt_len,
-                         recorder=rec, metrics=metrics)
+                         recorder=rec, metrics=metrics,
+                         slo_ttft_s={"interactive": 60.0, "batch": 600.0})
 
     def engine_wave():
         uids = [engine.submit(prompts[i], f"client{i % len(RANKS)}",
-                              max_new_tokens=steps)
+                              max_new_tokens=steps,
+                              slo_class=("interactive" if i % 2 == 0
+                                         else "batch"))
                 for i in range(n_req)]
         t0 = time.time()
         outs = engine.run()
@@ -121,6 +127,10 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
     results["obs_req_tok_s_p50"] = rtoks.get("p50", 0.0)
     results["obs_req_tok_s_p99"] = rtoks.get("p99", 0.0)
     results["obs_events"] = len(rec)
+    for cls, att in engine.slo_attainment().items():
+        results[f"obs_slo_{cls}_attainment"] = att
+        results[f"obs_slo_{cls}_total"] = \
+            metrics.counter(f"serve.slo.{cls}.total").value
     emit("serve/engine", t_engine * 1e6 / total_tok,
          f"{results['engine_tok_per_s']:.0f} tok/s over {n_req} req x "
          f"{steps} tok, traces={engine.trace_count}")
@@ -129,6 +139,10 @@ def _throughput_wave(results, cfg, key, params, adapters, quick):
          f"p99={results['obs_ttft_p99_ms']:.1f}ms, per-request tok/s "
          f"p50={results['obs_req_tok_s_p50']:.0f} "
          f"({results['obs_events']} trace events)")
+    emit("serve/obs_slo", 0.0,
+         ", ".join(f"{c}={results[f'obs_slo_{c}_attainment']:.0%} of "
+                   f"{int(results[f'obs_slo_{c}_total'])} req"
+                   for c in sorted(engine.slo_attainment())))
 
     # hot-swap one adapter mid-deployment; retraces must stay flat
     traces_before = engine.trace_count

@@ -49,18 +49,22 @@ def export_trace(recorder, prefix: str) -> dict:
     if d:
         os.makedirs(d, exist_ok=True)
     events = recorder.events()
+    dropped = recorder.dropped
     trace_path = f"{prefix}.trace.json"
     jsonl_path = f"{prefix}.events.jsonl"
-    doc = write_chrome_trace(events, trace_path)
+    doc = write_chrome_trace(events, trace_path, dropped=dropped)
     validate_chrome_trace(doc)
-    n = write_jsonl(events, jsonl_path)
-    return {"trace": trace_path, "jsonl": jsonl_path, "events": n}
+    n = write_jsonl(events, jsonl_path,
+                    meta={"dropped": dropped} if dropped else None)
+    return {"trace": trace_path, "jsonl": jsonl_path, "events": n,
+            "dropped": dropped}
 
 
 MESH_RESULT_TAG = "MESH_RESULT "
 
 
-def run_mesh_child(module: str, quick: bool, devices: int = 8) -> dict:
+def run_mesh_child(module: str, quick: bool, devices: int = 8,
+                   trace_path: str = None) -> dict:
     """Run ``python -m <module> --mesh-child`` in a subprocess with
     ``devices`` forced host devices and return its MESH_RESULT json.
 
@@ -69,12 +73,19 @@ def run_mesh_child(module: str, quick: bool, devices: int = 8) -> dict:
     initialized jax on one device — so every mesh-scaling section
     measures in a child process, exactly like tests/test_mesh.py. The
     child prints one ``MESH_RESULT {...}`` line; everything else it says
-    is passed through for the log."""
+    is passed through for the log.
+
+    ``trace_path`` (optional) is exported to the child as the
+    ``REPRO_CHILD_TRACE`` env var: children that support cross-process
+    collection ``dump_stream`` their recorder there (JSONL + clock
+    handshake) so the parent can ``merge_streams`` onto its timeline."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                         f" --xla_force_host_platform_device_count={devices}"
                         ).strip()
+    if trace_path:
+        env["REPRO_CHILD_TRACE"] = trace_path
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(root, "src"), root] +
         ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))

@@ -30,7 +30,15 @@ total (tier-1 runs it, so benchmark scripts cannot silently rot). Its
 numbers are pipeline checks, not magnitudes, so it defaults to a
 separate ``results/bench_quick.json`` instead of the canonical file.
 
+Every invocation also appends its flattened numeric results to a
+history JSONL beside --out (``results/bench_history.jsonl`` for the
+canonical file); ``--check`` turns that history into a perf-regression
+gate — rc=2 when a curated throughput/latency key moved past the
+threshold in the bad direction vs the previous run in the same mode
+(20% at full scale, 50% under --quick whose tiny shapes jitter ~±30%).
+
   PYTHONPATH=src python -m benchmarks.run [--only svd,comm] [--quick]
+  PYTHONPATH=src python -m benchmarks.run --quick --check
 """
 from __future__ import annotations
 
@@ -49,6 +57,118 @@ from benchmarks import (bench_bias, bench_comm, bench_convergence,
 
 ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline",
        "fed", "obs")
+
+# -- perf-regression gate ----------------------------------------------------
+#
+# Every invocation appends its flattened numeric results to a history
+# JSONL next to --out; ``--check`` compares the curated keys below
+# against the previous run with the same --quick flag and fails the
+# process (rc=2) on a move in the bad direction past the threshold.
+# The threshold is mode-aware: full-scale runs are long enough that 20%
+# is comfortably above machine noise, but --quick smoke shapes (2 fed
+# rounds, 4 serve requests) carry ~±30% wall-clock jitter even on an
+# idle box, so quick mode gates at 50% — still far below the 2-10x
+# moves a real perf rot produces. The allowlist is deliberately small:
+# throughput/latency keys only. Deliberately EXCLUDED: ``mesh_*`` keys
+# (forced host-device subprocess timings are scheduler artifacts, e.g.
+# mesh_tok_per_s_sharded swings 2x run to run) and all
+# correctness/byte-count keys (those are asserted inside the sections,
+# a gate adds nothing).
+
+REGRESSION_THRESHOLD = 0.20
+QUICK_REGRESSION_THRESHOLD = 0.50
+
+REGRESSION_KEYS = {
+    # section.key                       higher is better?
+    "serve.engine_tok_per_s": True,
+    "serve.merged_tok_per_s": True,
+    "serve.prefill_chunked_tok_per_s": True,
+    "serve.spec_forced_tok_per_s": True,
+    "serve.obs_ttft_p99_ms": False,
+    "fed.obs_round_ms_p99": False,
+    "server.tree_engine": False,           # us/call
+}
+
+
+def flatten_numeric(results: dict) -> dict:
+    """``{"section.key": float}`` over finite numeric leaves; private
+    ``_``-prefixed keys (and non-numeric values) are skipped."""
+    flat = {}
+    for section, vals in results.items():
+        if section.startswith("_") or not isinstance(vals, dict):
+            continue
+        for k, v in vals.items():
+            # sections like convergence key sub-dicts by int rank —
+            # only flat string-keyed numeric leaves are history-worthy
+            if not isinstance(k, str) or k.startswith("_") \
+                    or isinstance(v, bool):
+                continue
+            if isinstance(v, (int, float)) and v == v \
+                    and v not in (float("inf"), float("-inf")):
+                flat[f"{section}.{k}"] = float(v)
+    return flat
+
+
+def append_history(path: str, flat: dict, quick: bool) -> dict | None:
+    """Append one ``{"ts", "quick", "results"}`` line (atomic: the
+    rewritten file is swapped in with os.replace) and return the most
+    recent PRIOR entry with the same quick flag, or None."""
+    entries = []
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    entries.append(json.loads(line))
+                except json.JSONDecodeError:
+                    continue  # torn line from a crashed writer: drop it
+    prev = None
+    for e in reversed(entries):
+        if bool(e.get("quick")) == bool(quick):
+            prev = e
+            break
+    entries.append({"ts": time.time(), "quick": bool(quick),
+                    "results": flat})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        for e in entries:
+            f.write(json.dumps(e, default=float) + "\n")
+    os.replace(tmp, path)
+    return prev
+
+
+def check_regressions(prev_flat: dict, cur_flat: dict,
+                      keys=None, threshold: float = REGRESSION_THRESHOLD
+                      ) -> list:
+    """Curated keys present in BOTH runs that moved more than
+    ``threshold`` in the bad direction. Returns ``[(key, prev, cur,
+    rel_change), ...]`` — empty means the gate passes."""
+    bad = []
+    for key, higher_better in (keys or REGRESSION_KEYS).items():
+        if key not in prev_flat or key not in cur_flat:
+            continue
+        prev, cur = prev_flat[key], cur_flat[key]
+        if prev <= 0:
+            continue
+        rel = (cur - prev) / prev
+        regressed = rel < -threshold if higher_better \
+            else rel > threshold
+        if regressed:
+            bad.append((key, prev, cur, rel))
+    return bad
+
+
+def history_path_for(out_path: str) -> str:
+    """``results/bench_results.json -> results/bench_history.jsonl``;
+    any other --out gets ``<stem>_history.jsonl`` beside it."""
+    d = os.path.dirname(out_path)
+    stem = os.path.splitext(os.path.basename(out_path))[0]
+    if stem == "bench_results":
+        return os.path.join(d or ".", "bench_history.jsonl")
+    return os.path.join(d or ".", f"{stem}_history.jsonl")
 
 
 def _run_roofline(args):
@@ -117,6 +237,12 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--dryrun-jsonl", default="results/dryrun.jsonl")
     ap.add_argument("--out", default="results/bench_results.json")
+    ap.add_argument("--history", default=None,
+                    help="history JSONL path (default: derived from "
+                         "--out, e.g. results/bench_history.jsonl)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail (rc=2) on a >20%% regression vs the "
+                         "previous same-mode run on the curated keys")
     args = ap.parse_args(argv)
     if args.quick and args.out == ap.get_default("out"):
         # quick is a smoke mode (tiny shapes, meaningless magnitudes):
@@ -152,6 +278,34 @@ def main(argv=None) -> int:
     status = f"{len(results)}/{len(results) + len(errors)} sections ok"
     print(f"\n[benchmarks] {status} in {time.time() - t0:.1f}s "
           f"-> {args.out}")
+
+    # perf history + optional regression gate (only sections actually
+    # run this invocation land in the history line)
+    hist_path = args.history or history_path_for(args.out)
+    flat = flatten_numeric(results)
+    prev = append_history(hist_path, flat, args.quick)
+    print(f"[benchmarks] history +1 entry -> {hist_path}")
+    if args.check:
+        if prev is None:
+            print("[benchmarks] --check: no previous same-mode run in "
+                  "history; gate passes vacuously")
+        else:
+            threshold = (QUICK_REGRESSION_THRESHOLD if args.quick
+                         else REGRESSION_THRESHOLD)
+            regressions = check_regressions(prev["results"], flat,
+                                            threshold=threshold)
+            for key, pv, cv, rel in regressions:
+                print(f"[benchmarks] REGRESSION {key}: {pv:.4g} -> "
+                      f"{cv:.4g} ({rel:+.1%}, threshold "
+                      f"{threshold:.0%})")
+            if regressions:
+                print(f"[benchmarks] --check FAILED: "
+                      f"{len(regressions)} regressed key(s)")
+                return 2
+            checked = sum(1 for k in REGRESSION_KEYS
+                          if k in prev["results"] and k in flat)
+            print(f"[benchmarks] --check ok ({checked} curated keys "
+                  f"within {threshold:.0%})")
     return 1 if errors else 0
 
 

@@ -25,7 +25,9 @@ fraction of the dispatches.
 
 The fourth scenario reruns both engine flavours with event recording on
 and exports the shared timeline as a perfetto-loadable Chrome trace plus
-a JSONL event archive (see ``src/repro/obs``).
+a JSONL event archive, then folds the same events into time series and
+per-class TTFT SLOs and renders the static HTML ops report
+(see ``src/repro/obs``).
 
   PYTHONPATH=src python examples/serve_adapters.py
 """
@@ -37,8 +39,9 @@ import numpy as np
 
 from repro.configs import get_reduced
 from repro.models import model as model_lib
-from repro.obs import (MetricsRegistry, Recorder, validate_chrome_trace,
-                       write_chrome_trace, write_jsonl)
+from repro.obs import (MetricsRegistry, Objective, Recorder, SLOMonitor,
+                       SeriesStore, snapshot_text, validate_chrome_trace,
+                       write_chrome_trace, write_html, write_jsonl)
 from repro.serve import AdapterRegistry, ScriptedDrafter, ServeEngine
 from repro.serve.oracle import make_demo_adapter, merged_greedy
 
@@ -216,20 +219,27 @@ def observability():
 
       results/serve_trace.json    Chrome trace-event JSON (validated)
       results/serve_events.jsonl  lossless per-event archive
+      results/serve_report.html   static ops report (series sparklines,
+                                  SLO attainment, metrics summary)
     """
     cfg, key, params, ranks, adapters, registry = _fixture()
     rec = Recorder()
     metrics = MetricsRegistry()
 
-    # plain engine, tight pool: 8 req x 24 tok through 10 pages of 4
+    # plain engine, tight pool: 8 req x 24 tok through 10 pages of 4;
+    # two SLO classes with generous TTFT ceilings — the report's
+    # attainment table is the point, not a perf gate
     engine = ServeEngine(params, cfg, registry, max_batch=8,
                          max_seq=PROMPT_LEN + STEPS, page_size=4,
                          num_pages=10, prefill_chunk=4,
-                         recorder=rec, metrics=metrics, name="serve")
+                         recorder=rec, metrics=metrics, name="serve",
+                         slo_ttft_s={"interactive": 60.0, "batch": 600.0})
     prompts = np.asarray(jax.random.randint(
         jax.random.fold_in(key, 7), (8, PROMPT_LEN), 3, cfg.vocab_size))
     uids = [engine.submit(prompts[i], f"client{i % len(ranks)}",
-                          max_new_tokens=STEPS) for i in range(8)]
+                          max_new_tokens=STEPS,
+                          slo_class="interactive" if i % 2 == 0
+                          else "batch") for i in range(8)]
     outs = engine.run()
 
     # spec engine on the SAME recorder: replay those answers as drafts
@@ -245,7 +255,8 @@ def observability():
     spec.run()
 
     os.makedirs("results", exist_ok=True)
-    doc = write_chrome_trace(rec.events(), "results/serve_trace.json")
+    doc = write_chrome_trace(rec.events(), "results/serve_trace.json",
+                             dropped=rec.dropped)
     counts = validate_chrome_trace(doc)
     n = write_jsonl(rec.events(), "results/serve_events.jsonl")
     names = {e[1] for e in rec.events()}
@@ -259,6 +270,24 @@ def observability():
     print(f"  {engine.preemptions} preemptions, {engine.deferrals} "
           f"deferrals visible in-trace; spec acceptance "
           f"{spec.accepted_tokens / max(spec.drafted_tokens, 1):.2f}")
+
+    # the watching layer over the same events: time series, SLOs over
+    # the per-class TTFT, and the static ops report
+    store = SeriesStore(bucket_s=0.25)
+    store.fold(rec.events())
+    slo = SLOMonitor([
+        Objective("ttft", series="first_token.ttft_s", threshold=60.0,
+                  target=0.9),
+        Objective("decode", series="span.decode_step", threshold=60.0,
+                  target=0.9)], recorder=rec)
+    slo.fold(rec.events())
+    write_html("results/serve_report.html",
+               title="serve_adapters ops report", store=store, slo=slo,
+               metrics=metrics, dropped=rec.dropped)
+    att = ", ".join(f"{c}={a:.0%}"
+                    for c, a in engine.slo_attainment().items())
+    print(f"  slo attainment: {att} -> results/serve_report.html")
+    print(snapshot_text(store=store, slo=slo, title="  -- snapshot --"))
     print(metrics.summary_text("  -- metrics --"))
 
 

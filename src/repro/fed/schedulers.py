@@ -71,7 +71,7 @@ class SyncRound(Scheduler):
         continues the round index from ``session.rounds_done``."""
         history: Dict[str, List] = {
             "round": [], "train_loss": [], "eval_acc": [], "eval_loss": [],
-            "downlink_bytes": [], "uplink_bytes": []}
+            "downlink_bytes": [], "uplink_bytes": [], "health": []}
         rec = session.rec
         for i in range(num_rounds):
             rnd = session.rounds_done
@@ -99,6 +99,7 @@ class SyncRound(Scheduler):
             history["train_loss"].append(float(jnp.mean(losses)))
             history["downlink_bytes"].append(session.comm_log["downlink"][-1])
             history["uplink_bytes"].append(session.comm_log["uplink"][-1])
+            history["health"].append(session.health_snapshot())
             _eval_round(history, session, eval_fn,
                         rnd % eval_every == 0 or i == num_rounds - 1)
         return history
@@ -126,7 +127,7 @@ class SemiSync(Scheduler):
         history: Dict[str, List] = {
             "round": [], "train_loss": [], "eval_acc": [], "eval_loss": [],
             "downlink_bytes": [], "uplink_bytes": [], "stragglers": [],
-            "round_time": []}
+            "round_time": [], "health": []}
         rec = session.rec
         for i in range(num_rounds):
             rnd = session.rounds_done
@@ -183,6 +184,7 @@ class SemiSync(Scheduler):
                              cohort=len(cohort),
                              stragglers=int((~keep).sum()))
                 session.metrics.histogram("fed.round_s").observe(t1 - t_rnd)
+            history["health"].append(session.health_snapshot())
             _eval_round(history, session, eval_fn,
                         rnd % eval_every == 0 or i == num_rounds - 1)
         return history
@@ -231,7 +233,7 @@ class BufferedAsync(Scheduler):
         history: Dict[str, List] = {
             "time": [], "staleness": [], "accepted": [], "flush_events": [],
             "downlink_bytes": [], "uplink_bytes": [],
-            "eval_acc": [], "eval_loss": []}
+            "eval_acc": [], "eval_loss": [], "health": []}
         buffer: List = []
         comm_seen = {k: sum(v) for k, v in session.comm_log.items()}
 
@@ -243,6 +245,7 @@ class BufferedAsync(Scheduler):
                 session.staleness_log[-len(buffer):])
             history["accepted"].extend(flags)
             history["flush_events"].append(len(buffer))
+            history["health"].append(session.health_snapshot())
             buffer.clear()
 
         rec = session.rec

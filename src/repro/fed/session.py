@@ -49,7 +49,7 @@ from repro.core import rank as rank_lib
 from repro.fed import messages as msg_lib
 from repro.fed import strategies as strat_lib
 from repro.models import transformer as tf_lib
-from repro.obs import NULL_RECORDER, MetricsRegistry
+from repro.obs import NULL_RECORDER, MetricsRegistry, percentile
 
 
 @dataclass
@@ -167,6 +167,13 @@ class FedSession:
         # on their own tracks, so no track ever nests spans).
         self.rec = recorder if recorder is not None else NULL_RECORDER
         self.metrics = metrics if metrics is not None else MetricsRegistry()
+        # Per-round health snapshots (see ``health_snapshot``): the
+        # deployment-facing signal — wire bytes, stragglers, staleness
+        # — with z-score anomaly detection over the snapshot history.
+        # Observe-only; not persisted by save/restore.
+        self.health_log: List[Dict[str, float]] = []
+        self.health_z_threshold: float = 3.0
+        self._health_seen: Dict[str, float] = {}
 
     def _log_comm(self, direction: str, nbytes: int) -> None:
         """The one comm accounting choke point: the historical per-call
@@ -538,6 +545,77 @@ class FedSession:
 
     def comm_totals(self) -> Dict[str, int]:
         return {k: int(sum(v)) for k, v in self.comm_log.items()}
+
+    # -- health snapshots ----------------------------------------------------
+
+    #: snapshot keys scanned for z-score anomalies against the history
+    _HEALTH_ANOMALY_KEYS = ("downlink_bytes", "uplink_bytes",
+                            "stragglers", "staleness_p99")
+
+    def health_snapshot(self) -> Dict[str, float]:
+        """One per-round (or per-flush) health row: wire bytes,
+        straggler count, merged/dropped updates and staleness
+        percentiles *since the previous snapshot*, appended to
+        ``health_log``.
+
+        With >= 3 prior snapshots, each key in
+        ``_HEALTH_ANOMALY_KEYS`` is z-scored against the history; a
+        |z| above ``health_z_threshold`` records a ``health_anomaly``
+        instant on the ``obs.slo`` track and bumps the
+        ``fed.health.anomalies`` counter. Observe-only: this is the
+        signal the ROADMAP's SLO-aware deadline tuning will consume —
+        nothing here changes scheduling. All inputs are already-counted
+        state (no clock reads), so snapshots are always on, like the
+        metrics they read."""
+        seen = self._health_seen
+
+        def delta(key: str, cur: float) -> float:
+            d = cur - seen.get(key, 0.0)
+            seen[key] = cur
+            return float(d)
+
+        snap: Dict[str, float] = {
+            "round": float(self.rounds_done),
+            "version": float(self.version),
+            "downlink_bytes": delta("downlink",
+                                    sum(self.comm_log["downlink"])),
+            "uplink_bytes": delta("uplink", sum(self.comm_log["uplink"])),
+            "stragglers": delta(
+                "stragglers",
+                self.metrics.counter("fed.stragglers").value),
+            "updates_merged": delta(
+                "merged", self.metrics.counter("fed.updates_merged").value),
+            "updates_dropped": delta(
+                "dropped",
+                self.metrics.counter("fed.updates_dropped").value),
+        }
+        new_stale = self.staleness_log[int(seen.get("stale_n", 0)):]
+        seen["stale_n"] = float(len(self.staleness_log))
+        if new_stale:
+            snap["staleness_p50"] = float(percentile(new_stale, 50))
+            snap["staleness_p99"] = float(percentile(new_stale, 99))
+        else:
+            snap["staleness_p50"] = snap["staleness_p99"] = 0.0
+        anomalies = []
+        if len(self.health_log) >= 3:
+            for k in self._HEALTH_ANOMALY_KEYS:
+                hist = np.asarray([h[k] for h in self.health_log],
+                                  np.float64)
+                sd = float(hist.std())
+                if sd <= 1e-12:
+                    continue
+                z = (snap[k] - float(hist.mean())) / sd
+                if abs(z) > self.health_z_threshold:
+                    anomalies.append(k)
+                    self.metrics.counter("fed.health.anomalies").inc()
+                    if self.rec.enabled:
+                        self.rec.instant("health_anomaly", "obs.slo",
+                                         metric=k, z=float(z),
+                                         value=snap[k],
+                                         round=self.rounds_done)
+        snap["anomalies"] = float(len(anomalies))
+        self.health_log.append(snap)
+        return snap
 
     # -- checkpoint / resume -------------------------------------------------
 

@@ -1,6 +1,9 @@
-"""Unified observability layer: event recorder, metrics registry, exporters.
+"""Unified observability layer: event recorder, metrics registry,
+time-series/SLO monitoring, cross-process collection, exporters and the
+ops report.
 
-See ``src/repro/obs/README.md`` for the event model and exporter formats.
+See ``src/repro/obs/README.md`` for the event model, the series/SLO
+layer, the clock-handshake format and the exporter formats.
 """
 from repro.obs.recorder import (
     Event,
@@ -18,9 +21,36 @@ from repro.obs.metrics import (
 from repro.obs.export import (
     chrome_trace,
     read_jsonl,
+    read_jsonl_with_meta,
     validate_chrome_trace,
     write_chrome_trace,
     write_jsonl,
+)
+from repro.obs.timeseries import (
+    Bucket,
+    DEFAULT_INSTANT_VALUES,
+    SeriesStore,
+    TimeSeries,
+    iter_observations,
+)
+from repro.obs.slo import (
+    Objective,
+    SLOMonitor,
+    SLOState,
+    SLO_TRACK,
+)
+from repro.obs.collect import (
+    clock_handshake,
+    dump_stream,
+    merge_streams,
+    read_stream,
+    rebase_events,
+)
+from repro.obs.report import (
+    render_html,
+    snapshot_text,
+    sparkline_svg,
+    write_html,
 )
 
 __all__ = [
@@ -35,7 +65,26 @@ __all__ = [
     "percentile",
     "chrome_trace",
     "read_jsonl",
+    "read_jsonl_with_meta",
     "validate_chrome_trace",
     "write_chrome_trace",
     "write_jsonl",
+    "Bucket",
+    "DEFAULT_INSTANT_VALUES",
+    "SeriesStore",
+    "TimeSeries",
+    "iter_observations",
+    "Objective",
+    "SLOMonitor",
+    "SLOState",
+    "SLO_TRACK",
+    "clock_handshake",
+    "dump_stream",
+    "merge_streams",
+    "read_stream",
+    "rebase_events",
+    "render_html",
+    "snapshot_text",
+    "sparkline_svg",
+    "write_html",
 ]

@@ -146,6 +146,11 @@ class MetricsRegistry:
         return (name in self._counters or name in self._gauges
                 or name in self._histograms)
 
+    def gauges(self) -> Dict[str, Gauge]:
+        """Read-only snapshot of the gauge namespace (the time-series
+        store samples level-valued state — pool occupancy — from here)."""
+        return dict(self._gauges)
+
     # -- export -------------------------------------------------------------
 
     def as_dict(self) -> Dict[str, object]:

@@ -82,6 +82,18 @@ class Recorder:
         """Monotonic seconds (arbitrary origin, shared process-wide)."""
         return time.perf_counter()
 
+    @staticmethod
+    def wall() -> float:
+        """Wall-clock seconds (``time.time()``) — NOT for recording.
+
+        Events always carry ``now()`` stamps; the wall clock exists only
+        for the cross-process clock handshake (``repro.obs.collect``),
+        where it is the one reference two processes share. This is the
+        single sanctioned wall-clock read in ``repro.obs`` — the raw-
+        clock lint holds every other module to ``now()``/``wall()``.
+        """
+        return time.time()
+
     # -- recording ----------------------------------------------------------
 
     def instant(self, name: str, track: str, **args) -> None:

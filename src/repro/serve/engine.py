@@ -330,6 +330,7 @@ class ServeEngine:
                  cache_dtype=jnp.float32,
                  mesh=None,
                  recorder=None, metrics: Optional[MetricsRegistry] = None,
+                 slo_ttft_s: Optional[Dict[str, float]] = None,
                  name: str = "serve"):
         if cfg.arch_type not in ("dense", "vlm"):
             raise NotImplementedError(
@@ -376,6 +377,13 @@ class ServeEngine:
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.name = str(name)
         self._engine_track = f"{self.name}/engine"
+        # Per-class TTFT targets for SLO attainment accounting
+        # ({class: seconds}); classes without a target count as attained.
+        # Attainment needs TTFT, TTFT needs the clock — so the counters
+        # move only while recording is enabled (observe-only: nothing
+        # schedules differently by class yet).
+        self.slo_ttft_s: Dict[str, float] = dict(slo_ttft_s or {})
+        self._slo_classes: set = set()
         self.trace_count = 0
         if kv_mode == "paged":
             self.page_size = int(page_size)
@@ -451,13 +459,42 @@ class ServeEngine:
         return f"{self.name}/{req['uid']}"
 
     def _note_first_token(self, req: dict) -> None:
-        """First generated token: derive TTFT against the submit stamp."""
+        """First generated token: derive TTFT against the submit stamp,
+        and settle the request's SLO-class attainment (TTFT is the
+        class-gated latency; a class with no configured target counts
+        as attained, so uninstrumented classes still get traffic
+        counts)."""
         if "_ts" not in req or "_ttft" in req:
             return
         t = self.rec.now()
         req["_ttft"] = t - req["_ts"]
         self.metrics.histogram(f"{self.name}.ttft_s").observe(req["_ttft"])
-        self.rec.instant("first_token", self._track(req))
+        self.rec.instant("first_token", self._track(req),
+                         ttft_s=req["_ttft"])
+        cls = req.get("slo")
+        if cls is not None:
+            self._slo_classes.add(cls)
+            self.metrics.histogram(
+                f"{self.name}.ttft_s.{cls}").observe(req["_ttft"])
+            self.metrics.counter(f"{self.name}.slo.{cls}.total").inc()
+            target = self.slo_ttft_s.get(cls)
+            if target is None or req["_ttft"] <= target:
+                self.metrics.counter(f"{self.name}.slo.{cls}.ok").inc()
+            else:
+                self.rec.instant("slo_miss", "obs.slo", cls=cls,
+                                 uid=req["uid"], ttft_s=req["_ttft"],
+                                 target_s=float(target))
+
+    def slo_attainment(self) -> Dict[str, float]:
+        """Measured TTFT attainment per SLO class seen so far
+        (ok / total; 1.0 before any traffic in a class)."""
+        out: Dict[str, float] = {}
+        for cls in sorted(self._slo_classes):
+            total = self.metrics.counter(
+                f"{self.name}.slo.{cls}.total").value
+            ok = self.metrics.counter(f"{self.name}.slo.{cls}.ok").value
+            out[cls] = (ok / total) if total else 1.0
+        return out
 
     # -- introspection ------------------------------------------------------
 
@@ -676,7 +713,8 @@ class ServeEngine:
     # -- scheduler ----------------------------------------------------------
 
     def submit(self, prompt, adapter_id: str,
-               max_new_tokens: int = 16) -> str:
+               max_new_tokens: int = 16,
+               slo_class: Optional[str] = None) -> str:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -694,12 +732,15 @@ class ServeEngine:
         req = {"uid": uid, "prompt": prompt, "out": [],
                "t": 0, "max_new": int(max_new_tokens),
                "adapter": adapter_id}
+        if slo_class is not None:
+            req["slo"] = str(slo_class)
         if self.rec.enabled:
             req["_ts"] = self.rec.now()
+            extra = {"slo_class": req["slo"]} if "slo" in req else {}
             self.rec.instant("submit", self._track(req),
                              prompt=int(prompt.size),
                              max_new=int(max_new_tokens),
-                             adapter=adapter_id)
+                             adapter=adapter_id, **extra)
         self._queue.append(req)
         return uid
 

@@ -1,7 +1,7 @@
 """Observability layer tests: recorder semantics, exporter schema, and
 the serve/fed instrumentation contracts.
 
-Three layers under test:
+Layers under test:
 
 * ``repro.obs`` in isolation — recorder ring/clock semantics, the no-op
   null recorder, percentile/histogram math, JSONL round-trip, and the
@@ -15,19 +15,37 @@ Three layers under test:
 * A ``FedSession`` recorded through broadcast → collect → aggregate →
   async flush — server spans in order, measured wire-byte counters
   matching ``comm_log``, and staleness accounting on the flush path.
+* The *watching* layer (PR 8) — streaming time-series bucketing
+  (count/total conservation property-tested across bucket sizes,
+  bounded memory via horizon eviction), SLO attainment/burn-rate math
+  with its edge cases, per-class TTFT attainment on the engine,
+  per-round health snapshots with forced z-score anomalies on the
+  session, cross-process clock rebasing (synthetic AND a real
+  subprocess child), ring-truncation surfacing in both exporters, and
+  the HTML/terminal ops report.
 """
+import json
 import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
 import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
 
 from repro.configs import get_reduced
 from repro.fed import AsyncConfig, FedSession, ServerConfig
 from repro.models import model as model_lib
 from repro.obs import (NULL_RECORDER, Histogram, MetricsRegistry,
-                       NullRecorder, Recorder, chrome_trace, percentile,
-                       read_jsonl, validate_chrome_trace, write_jsonl)
+                       NullRecorder, Objective, Recorder, SLOMonitor,
+                       SLO_TRACK, SeriesStore, TimeSeries, chrome_trace,
+                       clock_handshake, dump_stream, merge_streams,
+                       percentile, read_jsonl, read_jsonl_with_meta,
+                       read_stream, rebase_events, render_html,
+                       snapshot_text, validate_chrome_trace,
+                       write_chrome_trace, write_jsonl)
 from repro.serve import AdapterRegistry, ServeEngine
 from repro.serve.oracle import make_demo_adapter, merged_greedy
 
@@ -136,7 +154,7 @@ def test_chrome_trace_schema_and_overlap_detection():
     rec.counter_sample("series", "wire", 5)
     doc = chrome_trace(rec.events(), process_name="p")
     counts = validate_chrome_trace(doc)
-    assert counts == {"X": 2, "i": 1, "C": 1, "M": 3}
+    assert counts == {"X": 2, "i": 1, "C": 1, "M": 3, "dropped": 0}
     evs = doc["traceEvents"]
     # metadata rows: process name + one thread row per distinct track
     meta = [e for e in evs if e["ph"] == "M"]
@@ -438,23 +456,460 @@ def test_fed_default_session_records_nothing():
 # clock-discipline lint: obs owns the clock inside serve + fed
 # ---------------------------------------------------------------------------
 
-def test_no_raw_clock_reads_in_serve_or_fed():
-    """``time.perf_counter()``/``time.time()`` inside repro/serve or
-    repro/fed would fork the timeline off the recorder's shared clock —
-    every timestamp there must come from ``Recorder.now()``."""
+def test_no_raw_clock_reads_in_serve_fed_or_obs():
+    """``time.perf_counter()``/``time.time()`` inside repro/serve,
+    repro/fed, or repro/obs itself would fork the timeline off the
+    recorder's shared clock — every timestamp must come from
+    ``Recorder.now()`` (and the one sanctioned wall-clock read for the
+    cross-process handshake is ``Recorder.wall()``, which lives in the
+    single exempted file ``obs/recorder.py``)."""
     root = os.path.join(os.path.dirname(__file__), os.pardir,
                         "src", "repro")
+    exempt = {os.path.join("obs", "recorder.py")}
     offenders = []
-    for sub in ("serve", "fed"):
+    for sub in ("serve", "fed", "obs"):
         for dirpath, _, files in os.walk(os.path.join(root, sub)):
             for fn in files:
                 if not fn.endswith(".py"):
                     continue
                 path = os.path.join(dirpath, fn)
+                if os.path.relpath(path, root) in exempt:
+                    continue
                 with open(path) as f:
                     src = f.read()
                 if "time.perf_counter(" in src or "time.time(" in src:
                     offenders.append(os.path.relpath(path, root))
     assert not offenders, (
-        f"raw clock reads outside repro.obs: {offenders} — record "
-        f"through Recorder.now() / span() instead")
+        f"raw clock reads outside repro.obs.recorder: {offenders} — "
+        f"record through Recorder.now() / span() instead")
+
+
+# ---------------------------------------------------------------------------
+# streaming time series: bucketing conservation + bounded memory
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=1, max_value=64),
+       bucket_ms=st.sampled_from([1, 5, 25, 100, 1000]),
+       spread_s=st.floats(min_value=0.001, max_value=5.0),
+       valued=st.booleans())
+def test_timeseries_bucketing_conserves_mass(n, bucket_ms, spread_s,
+                                             valued):
+    """Property (the module docstring's invariant): for ANY bucket
+    width, as long as nothing is evicted, sum of bucket counts == number
+    of observations and sum of bucket totals == sum of values —
+    rebucketing conserves mass."""
+    rng = np.random.default_rng(n * 1000 + bucket_ms)
+    ts = rng.uniform(0.0, spread_s, size=n)
+    vals = rng.uniform(-10.0, 10.0, size=n) if valued else None
+    s = TimeSeries("s", bucket_s=bucket_ms / 1e3, max_buckets=1 << 24)
+    for i in range(n):
+        s.observe(float(ts[i]), None if vals is None else float(vals[i]))
+    assert s.count == n and s.dropped == 0
+    assert s.window_count() == sum(b.count for b in s.buckets()) == n
+    want_total = 0.0 if vals is None else float(np.sum(vals))
+    assert s.window_total() == pytest.approx(want_total, abs=1e-9)
+    assert s.total == pytest.approx(want_total, abs=1e-9)
+    # buckets are disjoint, sorted, and every observation's bucket start
+    # is at or before its timestamp
+    starts = [b.start for b in s.buckets()]
+    assert starts == sorted(starts) and len(set(starts)) == len(starts)
+
+
+def test_timeseries_bounded_memory_and_eviction():
+    """Advancing time past the window evicts oldest buckets into
+    ``dropped``; late observations behind the horizon never resurrect
+    them. Lifetime count keeps covering everything."""
+    s = TimeSeries("s", bucket_s=1.0, max_buckets=4)
+    for t in range(10):                    # buckets 0..9, window keeps 4
+        s.observe(t + 0.5, 1.0)
+    assert len(s) <= 4
+    assert s.count == 10
+    assert s.window_count() + s.dropped == 10
+    assert s.dropped == 6
+    retained = {b.start for b in s.buckets()}
+    assert retained == {6.0, 7.0, 8.0, 9.0}
+    s.observe(0.5, 1.0)                    # behind the horizon: dropped
+    assert s.dropped == 7 and len(s) <= 4 and s.count == 11
+    with pytest.raises(ValueError):
+        TimeSeries("s", bucket_s=0.0)
+    with pytest.raises(ValueError):
+        TimeSeries("s", max_buckets=0)
+
+
+def test_seriesstore_fold_routing():
+    """C samples -> valued series; X spans -> span.<name> durations;
+    instants -> count-only inst.<name> plus the stamped-value series
+    for the instrumented names (first_token.ttft_s etc.)."""
+    rec = Recorder()
+    t = rec.now()
+    rec.counter_sample("fed.downlink_bytes", "fed.wire", 256)
+    rec.complete("decode_step", "serve/engine", t, t + 0.010, batch=3)
+    rec.instant("first_token", "serve/req0", ttft_s=0.125)
+    rec.instant("admit", "serve/req0")      # no valued routing
+    store = SeriesStore(bucket_s=1.0)
+    n = store.fold(rec.events())
+    assert n == 5                           # C + X + (inst + valued) + inst
+    assert store.series("fed.downlink_bytes").total == 256.0
+    sp = store.series("span.decode_step")
+    assert sp.count == 1 and sp.total == pytest.approx(0.010)
+    assert store.series("first_token.ttft_s").total == \
+        pytest.approx(0.125)
+    assert store.series("inst.admit").count == 1
+    assert not store.has("admit.ttft_s")
+    d = store.as_dict()
+    assert d["first_token.ttft_s"]["mean"] == pytest.approx(0.125)
+
+
+def test_seriesstore_gauge_sampling():
+    m = MetricsRegistry()
+    m.gauge("pool.free").set(7)
+    m.gauge("pool.owners").set(2)
+    store = SeriesStore(bucket_s=1.0)
+    assert store.sample_gauges(m, t=1.5) == 2
+    assert store.sample_gauges(m, t=2.5, prefix="pool.free") == 1
+    assert store.series("pool.free").count == 2
+    assert store.series("pool.owners").count == 1
+
+
+# ---------------------------------------------------------------------------
+# SLO monitor: attainment / burn-rate math + violation instants
+# ---------------------------------------------------------------------------
+
+def test_slo_attainment_and_violation_instants():
+    rec = Recorder()
+    t = rec.now()
+    for i, ttft in enumerate((0.05, 0.08, 0.50, 0.06)):
+        rec.instant("first_token", f"serve/req{i}", ttft_s=ttft)
+    slo = SLOMonitor([Objective("ttft", series="first_token.ttft_s",
+                                threshold=0.1, target=0.9)],
+                     recorder=rec)
+    assert slo.fold(rec.events()) == 4
+    states = slo.evaluate(now=t + 1.0)
+    st_ = states["ttft"]
+    assert st_.good == 3 and st_.bad == 1
+    assert st_.attainment == pytest.approx(0.75)
+    assert st_.error_budget == pytest.approx(0.1)
+    assert st_.burn_rate == pytest.approx(2.5)      # 25% bad / 10% budget
+    assert st_.in_violation
+    # violation recorded both in the log and on the obs.slo track
+    assert len(slo.violations) == 1
+    assert slo.violations[0]["objective"] == "ttft"
+    viol = [e for e in rec.events() if e[2] == SLO_TRACK]
+    assert len(viol) == 1 and viol[0][1] == "slo_violation.ttft"
+    assert viol[0][5]["attainment"] == pytest.approx(0.75)
+
+
+def test_slo_edge_cases_empty_and_all_violating():
+    """Empty window: vacuously attained, zero burn. All-violating:
+    attainment 0 and burn at the 1/(1-target) ceiling."""
+    slo = SLOMonitor([Objective("o", series="s", threshold=1.0,
+                                target=0.99)])
+    st_ = slo.evaluate(now=0.0)["o"]
+    assert st_.total == 0 and st_.attainment == 1.0
+    assert st_.burn_rate == 0.0 and not st_.in_violation
+    for i in range(5):
+        slo.observe("s", float(i) * 0.1, 2.0)       # all above threshold
+    st_ = slo.evaluate(now=1.0)["o"]
+    assert st_.attainment == 0.0 and st_.in_violation
+    assert st_.burn_rate == pytest.approx(1.0 / (1.0 - 0.99))
+    # duplicate objective names are rejected; target 1.0 has no budget
+    with pytest.raises(ValueError):
+        SLOMonitor([Objective("x", series="a", threshold=1),
+                    Objective("x", series="b", threshold=1)])
+    with pytest.raises(ValueError):
+        Objective("y", series="a", threshold=1, target=1.0)
+
+
+def test_slo_higher_is_better_and_count_only_skip():
+    slo = SLOMonitor([Objective("tput", series="tok_s", threshold=100.0,
+                                target=0.5, lower_is_better=False)])
+    rec = Recorder()
+    rec.instant("admit", "t")               # count-only: not routed
+    assert slo.fold(rec.events()) == 0
+    slo.observe("tok_s", 0.1, 150.0)
+    slo.observe("tok_s", 0.2, 50.0)
+    slo.observe("tok_s", 0.3, 120.0)
+    st_ = slo.evaluate(now=1.0)["tput"]
+    assert st_.good == 2 and st_.bad == 1 and not st_.in_violation
+
+
+def test_engine_slo_classes_attainment(serve_setup):
+    """``submit(slo_class=...)`` carries the class through the request
+    track; per-class TTFT attainment settles at first token — a
+    sub-nanosecond target forces a miss (attainment 0.0 + an
+    ``slo_miss`` instant on obs.slo), a generous one attains 1.0."""
+    cfg, params, adapters, prompts = serve_setup
+    reg = AdapterRegistry(cfg, capacity=len(adapters))
+    for aid, tree in adapters.items():
+        reg.register(aid, tree)
+    rec = Recorder()
+    metrics = MetricsRegistry()
+    engine = ServeEngine(params, cfg, reg, max_batch=2,
+                         max_seq=PROMPT_LEN + 2, recorder=rec,
+                         metrics=metrics,
+                         slo_ttft_s={"fast": 1e-12, "easy": 600.0})
+    engine.submit(prompts[0], "client0", max_new_tokens=2,
+                  slo_class="fast")
+    engine.submit(prompts[1], "client1", max_new_tokens=2,
+                  slo_class="easy")
+    engine.run()
+    assert engine.slo_attainment() == {"easy": 1.0, "fast": 0.0}
+    assert metrics.counter("serve.slo.fast.total").value == 1
+    assert metrics.counter("serve.slo.fast.ok").value == 0
+    assert metrics.counter("serve.slo.easy.ok").value == 1
+    misses = [e for e in rec.events()
+              if e[1] == "slo_miss" and e[2] == SLO_TRACK]
+    assert len(misses) == 1 and misses[0][5]["cls"] == "fast"
+    # the submit instant carries the class for the trace
+    submits = [e for e in rec.events() if e[1] == "submit"]
+    assert {e[5].get("slo_class") for e in submits} == {"fast", "easy"}
+    # per-class TTFT histogram populated alongside the aggregate one
+    assert metrics.histogram("serve.ttft_s.fast").count == 1
+
+
+def test_engine_slo_classes_inert_without_recorder(serve_setup):
+    """Recording off => no TTFT clock => the class accounting must not
+    move (and must not crash): observe-only means a production engine
+    with recording disabled stays a true no-op."""
+    cfg, params, adapters, prompts = serve_setup
+    reg = AdapterRegistry(cfg, capacity=len(adapters))
+    for aid, tree in adapters.items():
+        reg.register(aid, tree)
+    engine = ServeEngine(params, cfg, reg, max_batch=2,
+                         max_seq=PROMPT_LEN + 2,
+                         slo_ttft_s={"fast": 1e-12})
+    engine.submit(prompts[0], "client0", max_new_tokens=2,
+                  slo_class="fast")
+    engine.run()
+    assert engine.slo_attainment() == {}
+    assert engine.metrics.counter("serve.slo.fast.total").value == 0
+
+
+# ---------------------------------------------------------------------------
+# fed health snapshots: per-round deltas + z-score anomalies
+# ---------------------------------------------------------------------------
+
+def test_fed_health_snapshots_and_forced_anomaly():
+    """Steady wire traffic with slight jitter, then a 100x spike: the
+    spike must z-score as an anomaly (instant on obs.slo + counter),
+    and snapshots must report deltas, not running totals."""
+    cfg = get_reduced("roberta-large")
+    scfg = ServerConfig(num_clients=4, clients_per_round=2, seed=0)
+    base = model_lib.init_params(jax.random.PRNGKey(3), cfg)
+    rec = Recorder()
+    metrics = MetricsRegistry()
+    sess = FedSession(cfg, scfg, base, recorder=rec, metrics=metrics)
+    for step, down in enumerate((1000.0, 1010.0, 990.0, 1005.0)):
+        sess.comm_log["downlink"].append(down)
+        sess.comm_log["uplink"].append(down / 2)
+        sess.staleness_log.append(step % 2)
+        snap = sess.health_snapshot()
+        assert snap["downlink_bytes"] == pytest.approx(down)
+        assert snap["anomalies"] == 0.0
+    assert len(sess.health_log) == 4
+    assert sess.health_log[-1]["staleness_p99"] == 1.0
+    # the spike: two orders of magnitude over the steady mean
+    sess.comm_log["downlink"].append(100000.0)
+    sess.comm_log["uplink"].append(500.0)
+    snap = sess.health_snapshot()
+    assert snap["anomalies"] >= 1.0
+    assert metrics.counter("fed.health.anomalies").value >= 1
+    anom = [e for e in rec.events()
+            if e[1] == "health_anomaly" and e[2] == SLO_TRACK]
+    assert anom and anom[0][5]["metric"] == "downlink_bytes"
+    assert abs(anom[0][5]["z"]) > sess.health_z_threshold
+
+
+def test_fed_health_snapshot_keys_are_deltas():
+    """Back-to-back snapshots with no traffic in between report zeros —
+    the snapshot is a rate window, not a cumulative read."""
+    cfg = get_reduced("roberta-large")
+    scfg = ServerConfig(num_clients=2, clients_per_round=2, seed=0)
+    base = model_lib.init_params(jax.random.PRNGKey(4), cfg)
+    sess = FedSession(cfg, scfg, base)
+    sess.broadcast_cohort(np.array([0, 1]))
+    first = sess.health_snapshot()
+    assert first["downlink_bytes"] > 0
+    second = sess.health_snapshot()
+    assert second["downlink_bytes"] == 0.0
+    assert second["staleness_p50"] == 0.0   # no new staleness entries
+
+
+# ---------------------------------------------------------------------------
+# cross-process collection: clock rebase + merge (synthetic and real)
+# ---------------------------------------------------------------------------
+
+def test_rebase_events_constant_shift_preserves_timing():
+    """Synthetic two-process streams: the rebase is one constant shift
+    per child — child-internal gaps and span durations are exact, and
+    per-track ordering survives."""
+    child_events = [
+        ("X", "a", "trk", 10.0, 0.5, {}),
+        ("X", "b", "trk", 11.0, 0.25, {}),
+        ("i", "m", "trk", 12.0, 0.0, {}),
+    ]
+    # child perf origin ~10s, parent ~1000s, shared wall clock 5000s
+    child_hs = {"process": "kid", "perf": 10.0, "wall": 5000.0}
+    parent_hs = {"process": "parent", "perf": 1000.0, "wall": 5000.0}
+    out = rebase_events(child_events, child_hs, parent_hs,
+                        track_prefix="kid/")
+    # offset = (5000-10) - (5000-1000) = 990
+    assert [e[3] for e in out] == [1000.0, 1001.0, 1002.0]
+    assert [e[4] for e in out] == [0.5, 0.25, 0.0]
+    assert all(e[2] == "kid/trk" for e in out)
+    # internal gap conserved exactly
+    assert out[1][3] - out[0][3] == child_events[1][3] - child_events[0][3]
+
+
+def test_merge_streams_monotone_and_valid():
+    parent = [("X", "p", "ptrk", 1000.0, 0.5, {}),
+              ("X", "q", "ptrk", 1002.0, 0.5, {})]
+    child = [("X", "c1", "trk", 10.0, 0.2, {}),
+             ("X", "c2", "trk", 10.5, 0.2, {})]
+    child_hs = {"process": "kid", "perf": 9.0, "wall": 5000.0}
+    # child perf 9.0 == parent perf 1000.5 on the shared wall clock
+    parent_hs = {"process": "parent", "perf": 1000.5, "wall": 5000.0}
+    merged = merge_streams(parent, [(child, child_hs)], parent_hs)
+    assert [e[3] for e in merged] == sorted(e[3] for e in merged)
+    # child events landed between the parent spans
+    kid = [e for e in merged if e[2] == "kid/trk"]
+    assert kid[0][3] == pytest.approx(1001.5)
+    validate_chrome_trace(chrome_trace(merged))
+    # a handshake-less child is rejected, not silently misaligned
+    with pytest.raises(ValueError, match="handshake"):
+        merge_streams(parent, [(child, None)], parent_hs)
+
+
+def test_collect_roundtrip_with_real_child_process(tmp_path):
+    """The golden collection test: a REAL subprocess records events,
+    ``dump_stream``s them, and the parent merges them onto its own
+    timeline — the child's events must land between the parent's
+    before/after markers and the merged trace must validate."""
+    path = str(tmp_path / "child.jsonl")
+    src_root = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    child_code = (
+        "from repro.obs import Recorder, dump_stream\n"
+        "rec = Recorder()\n"
+        "t0 = rec.now()\n"
+        "rec.complete('child_work', 'work', t0, rec.now(), n=1)\n"
+        "rec.instant('child_mark', 'work')\n"
+        f"dump_stream(rec, {path!r}, process='kid')\n")
+    rec = Recorder()
+    rec.instant("before_child", "parent")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src_root] + ([env["PYTHONPATH"]]
+                      if env.get("PYTHONPATH") else []))
+    subprocess.run([sys.executable, "-c", child_code], env=env,
+                   check=True, timeout=120)
+    rec.instant("after_child", "parent")
+    events, hs = read_stream(path)
+    assert hs is not None and hs["process"] == "kid"
+    assert hs["dropped"] == 0
+    assert [e[1] for e in events] == ["child_work", "child_mark"]
+    merged = merge_streams(rec.events(), [(events, hs)],
+                           clock_handshake("parent"))
+    t_before = next(e[3] for e in merged if e[1] == "before_child")
+    t_after = next(e[3] for e in merged if e[1] == "after_child")
+    kid = [e for e in merged if e[2].startswith("kid/")]
+    assert len(kid) == 2
+    for e in kid:
+        assert t_before < e[3] < t_after
+    counts = validate_chrome_trace(chrome_trace(merged))
+    assert counts["X"] == 1 and counts["i"] == 3
+
+
+# ---------------------------------------------------------------------------
+# exporters: ring truncation surfaced, meta rows, atomic writes
+# ---------------------------------------------------------------------------
+
+def test_ring_truncation_surfaces_in_both_exporters(tmp_path):
+    """A small-capacity ring that dropped events must say so in both
+    export formats — a trace that silently starts mid-run reads as a
+    complete record."""
+    rec = Recorder(capacity=3)
+    for i in range(8):
+        rec.instant(f"e{i}", "t")
+    assert rec.dropped == 5
+    trace_path = str(tmp_path / "t.trace.json")
+    doc = write_chrome_trace(rec.events(), trace_path,
+                             dropped=rec.dropped)
+    counts = validate_chrome_trace(doc)
+    assert counts["dropped"] == 5
+    with open(trace_path) as f:
+        assert json.load(f)["traceEvents"]
+    jsonl_path = str(tmp_path / "t.events.jsonl")
+    n = write_jsonl(rec.events(), jsonl_path,
+                    meta={"dropped": rec.dropped})
+    assert n == 3
+    events, meta = read_jsonl_with_meta(jsonl_path)
+    assert meta == {"dropped": 5}
+    assert events == rec.events()          # retained events round-trip
+    assert read_jsonl(jsonl_path) == rec.events()   # meta row skipped
+
+
+def test_write_jsonl_without_meta_has_no_meta_row(tmp_path):
+    rec = Recorder()
+    rec.instant("e", "t")
+    path = str(tmp_path / "plain.jsonl")
+    write_jsonl(rec.events(), path)
+    events, meta = read_jsonl_with_meta(path)
+    assert meta is None and events == rec.events()
+    with open(path) as f:
+        assert len(f.read().strip().splitlines()) == 1
+
+
+def test_exporter_writes_are_atomic(tmp_path):
+    """No ``*.tmp.*`` leftovers after a write, and the destination
+    appears fully formed (the tmp+os.replace discipline)."""
+    rec = Recorder()
+    t = rec.now()
+    rec.complete("s", "t", t, t + 0.001)
+    for fn, path in ((write_jsonl, tmp_path / "a.jsonl"),
+                     (write_chrome_trace, tmp_path / "a.json")):
+        fn(rec.events(), str(path))
+        assert path.exists()
+    assert not [p for p in os.listdir(tmp_path) if ".tmp." in p]
+
+
+# ---------------------------------------------------------------------------
+# ops report: HTML + terminal snapshot
+# ---------------------------------------------------------------------------
+
+def test_report_html_and_snapshot(tmp_path):
+    rec = Recorder()
+    t = rec.now()
+    rec.instant("first_token", "serve/req0", ttft_s=0.05)
+    rec.instant("first_token", "serve/req1", ttft_s=5.0)
+    rec.complete("decode_step", "serve/engine", t, t + 0.01)
+    store = SeriesStore(bucket_s=0.5)
+    store.fold(rec.events())
+    slo = SLOMonitor([Objective("ttft", series="first_token.ttft_s",
+                                threshold=0.1, target=0.9)])
+    slo.fold(rec.events())
+    m = MetricsRegistry()
+    m.counter("serve.tokens").inc(42)
+    html = render_html(title="t&t", store=store, slo=slo, metrics=m,
+                       dropped=3)
+    assert "t&amp;t" in html                # escaping
+    assert "VIOLATED" in html and "burn" in html
+    assert "<svg" in html and "polyline" in html    # sparklines
+    assert "dropped" in html and ">3</b>" in html   # truncation banner
+    assert "serve.tokens" in html
+    from repro.obs import write_html
+    p = write_html(str(tmp_path / "r.html"), store=store, slo=slo)
+    assert os.path.getsize(p) > 0
+    assert not [q for q in os.listdir(tmp_path) if ".tmp." in q]
+    txt = snapshot_text(store=store, slo=slo, metrics=m, title="snap")
+    assert "snap" in txt and "VIOLATED" in txt
+    assert "first_token.ttft_s" in txt and "serve.tokens" in txt
+
+
+def test_report_empty_inputs_render():
+    html = render_html()
+    assert "<html" in html and "SLO" not in html
+    assert snapshot_text() == ""
+    from repro.obs import sparkline_svg
+    assert "no data" in sparkline_svg([])
+    assert "polyline" in sparkline_svg([1.0])       # single point ok
