@@ -122,6 +122,60 @@ def run(num_clients=100, quick=False):
          f"{float(expected.mean()):.0f}) "
          f"(per-round server cost amortized over K={k} clients: "
          f"{agg_us / k:.0f}us/client)")
+    out.update(_codec_curve(layers))
+    return out
+
+
+def _codec_curve(layers: int) -> dict:
+    """Accuracy-vs-bytes trade-off of the wire codecs (fed/compress.py),
+    measured on serialized Broadcast messages: bytes are real buffer
+    lengths, accuracy is the relative Frobenius error of the
+    reconstructed effective update ΔW = A·B (accumulated per layer, so
+    the full d×d update is never resident)."""
+    from repro.fed import codec_from_name
+
+    rng = np.random.default_rng(0)
+    r = 8
+    decay = np.geomspace(1.0, 0.05, r)   # realistic direction energies
+    adapter = {
+        t: {"A": (rng.standard_normal((layers, D_MODEL, r))
+                  * decay).astype(np.float32),
+            "B": (rng.standard_normal((layers, r, D_MODEL))
+                  * decay[:, None]).astype(np.float32)}
+        for t in ("q", "v")}
+
+    def rel_err(back) -> float:
+        num = den = 0.0
+        for t, ad in adapter.items():
+            for li in range(layers):
+                dw = ad["A"][li] @ ad["B"][li]
+                dd = dw - np.asarray(back[t]["A"][li], np.float32) \
+                    @ np.asarray(back[t]["B"][li], np.float32)
+                num += float((dd.astype(np.float64) ** 2).sum())
+                den += float((dw.astype(np.float64) ** 2).sum())
+        return float(np.sqrt(num / den))
+
+    out = {}
+    for spec in ("none", "topk:2", "topk:4", "int8", "bf16"):
+        codec = codec_from_name(spec)
+        msg = msg_lib.Broadcast(version=0, client_id=0, adapter=adapter,
+                                codec=codec)
+        back = msg_lib.Broadcast.from_bytes(msg.to_bytes())
+        slug = spec.replace(":", "")
+        out[f"codec_{slug}_bytes"] = float(msg.num_bytes)
+        out[f"codec_{slug}_rel_err"] = rel_err(back.adapter)
+        emit(f"comm/codec_{slug}", 0.0,
+             f"bytes={msg.num_bytes} rel_err(ΔW)="
+             f"{out[f'codec_{slug}_rel_err']:.2e} "
+             f"({msg.num_bytes / out['codec_none_bytes'] * 100:.0f}% of "
+             f"raw f32)")
+    assert out["codec_none_rel_err"] == 0.0, \
+        "codec=None must keep the wire path byte-identical"
+    assert out["codec_int8_bytes"] < out["codec_bf16_bytes"] \
+        < out["codec_none_bytes"]
+    assert out["codec_topk2_bytes"] < out["codec_topk4_bytes"] \
+        < out["codec_none_bytes"]
+    assert out["codec_topk2_rel_err"] > out["codec_topk4_rel_err"]
     return out
 
 

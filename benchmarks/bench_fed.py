@@ -27,7 +27,8 @@ import numpy as np
 
 from benchmarks.common import emit, obs_percentiles, run_mesh_child
 from repro.configs import get_reduced
-from repro.fed import (AsyncConfig, BufferedAsync, FedSession, SemiSync,
+from repro.fed import (AsyncConfig, BufferedAsync, ClientPopulation,
+                       FedSession, HierarchicalTopology, SemiSync,
                        ServerConfig, SimConfig, SyncRound)
 from repro.obs import MetricsRegistry, Recorder
 from repro.fed.simulation import make_experiment_setup, pretrain_backbone
@@ -160,6 +161,63 @@ def run(quick: bool = False) -> Dict:
          f"measured broadcast bytes/client: random[2,8]="
          f"{down_by_policy['random']:.0f} vs uniform r8="
          f"{down_by_policy['uniform']:.0f} ({100 * ratio:.0f}%)")
+
+    # -- hierarchical two-tier aggregation (stack: lossless; engine:
+    #    pre-merged edge updates that shrink root fan-in bytes) ------------
+    t0 = time.time()
+    topo = HierarchicalTopology(num_edges=2, edge_mode="stack")
+    finals = {}
+    for name, topology in (("flat", None), ("hier", topo)):
+        sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"])
+        SyncRound(topology=topology).run(sess, cohort_train, data_fn,
+                                         sim.rounds, eval_fn=eval_fn)
+        finals[name] = sess
+    bit_identical = all(
+        bool(np.array_equal(
+            np.asarray(finals["hier"].global_lora[t][leaf]),
+            np.asarray(finals["flat"].global_lora[t][leaf])))
+        for t in finals["flat"].global_lora for leaf in ("A", "B", "mask"))
+    assert bit_identical, "stack-mode hierarchy drifted from flat"
+    out["hier_bit_identical"] = int(bit_identical)
+    edge_rows = [v for k_, v in finals["hier"].comm_log.items()
+                 if k_.startswith("edge")]
+    out["hier_edge_uplink_bytes_per_round"] = float(
+        sum(sum(r) for r in edge_rows) / sim.rounds)
+    sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"])
+    SyncRound(topology=HierarchicalTopology(
+        num_edges=2, edge_mode="engine")).run(
+        sess, cohort_train, data_fn, sim.rounds, eval_fn=eval_fn)
+    out["hier_engine_edge_bytes_per_round"] = float(
+        sum(sum(v) for k_, v in sess.comm_log.items()
+            if k_.startswith("edge")) / sim.rounds)
+    emit("fed/hierarchical", (time.time() - t0) * 1e6 / sim.rounds,
+         f"stack bit_identical={bit_identical} "
+         f"edge->root bytes/round: stack="
+         f"{out['hier_edge_uplink_bytes_per_round']:.0f} vs engine="
+         f"{out['hier_engine_edge_bytes_per_round']:.0f} (2 edges)")
+
+    # -- population-scale round: lazy materialization over 2k/10k clients --
+    t0 = time.time()
+    pop = ClientPopulation.synthetic(2000 if quick else 10_000, seed=0,
+                                     vocab_size=cfg.vocab_size)
+    scfg_pop = _scfg(quick, num_clients=pop.size)
+    sess = FedSession(cfg, scfg_pop, base, population=pop,
+                      sampler="rank_stratified")
+    h = SyncRound().run(sess, cohort_train,
+                        pop.data_fn(sim.local_steps, sim.local_batch),
+                        sim.rounds, eval_fn=eval_fn)
+    assert pop.max_resident <= scfg_pop.clients_per_round, \
+        "population round materialized more than the cohort"
+    out["pop_clients"] = float(pop.size)
+    out["pop_cohort"] = float(scfg_pop.clients_per_round)
+    out["pop_max_resident"] = float(pop.max_resident)
+    out["pop_downlink_bytes_per_round"] = float(
+        np.mean(h["downlink_bytes"]))
+    out["pop_uplink_bytes_per_round"] = float(np.mean(h["uplink_bytes"]))
+    emit("fed/population", (time.time() - t0) * 1e6 / sim.rounds,
+         f"{pop.size} clients, cohort={scfg_pop.clients_per_round}, "
+         f"max_resident={pop.max_resident} (rank-stratified sampler), "
+         f"final_acc={h['eval_acc'][-1]:.4f}")
 
     # -- mesh scaling: shard_map'd aggregation, 1 vs 8 host devices ---------
     out.update(run_mesh_child("benchmarks.bench_fed", quick))

@@ -69,10 +69,10 @@ ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline",
 # rounds, 4 serve requests) carry ~±30% wall-clock jitter even on an
 # idle box, so quick mode gates at 50% — still far below the 2-10x
 # moves a real perf rot produces. The allowlist is deliberately small:
-# throughput/latency keys only. Deliberately EXCLUDED: ``mesh_*`` keys
-# (forced host-device subprocess timings are scheduler artifacts, e.g.
-# mesh_tok_per_s_sharded swings 2x run to run) and all
-# correctness/byte-count keys (those are asserted inside the sections,
+# throughput/latency keys plus the deterministic wire-byte counters.
+# Deliberately EXCLUDED: ``mesh_*`` keys (forced host-device subprocess
+# timings are scheduler artifacts, e.g. mesh_tok_per_s_sharded swings 2x
+# run to run) and pure correctness keys (asserted inside the sections,
 # a gate adds nothing).
 
 REGRESSION_THRESHOLD = 0.20
@@ -87,6 +87,11 @@ REGRESSION_KEYS = {
     "serve.obs_ttft_p99_ms": False,
     "fed.obs_round_ms_p99": False,
     "server.tree_engine": False,           # us/call
+    # measured wire bytes/round: deterministic (serialized buffer lengths,
+    # not timings), so any drift is a real format/accounting change
+    "fed.obs_downlink_bytes_per_round": False,
+    "fed.obs_uplink_bytes_per_round": False,
+    "fed.hier_edge_uplink_bytes_per_round": False,
 }
 
 

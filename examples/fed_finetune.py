@@ -10,30 +10,71 @@ Broadcast/ClientUpdate messages, claim C4).
 sync (cohort barrier), semisync (deadline straggler cutoff), or async
 (K-buffered staleness-discounted merging).
 
+Population-scale federation rides on the same session: ``--population N``
+switches to a lazily-materialized N-client population with a
+rank-stratified sampler (``--sample-rate`` sets the cohort fraction),
+``--edges E`` routes aggregation through E edge aggregators (two-tier,
+bit-identical to flat), and ``--codec`` compresses every wire message
+(none / bf16 / int8 / topk[:k]).
+
   PYTHONPATH=src python examples/fed_finetune.py --task rte --rounds 12
   PYTHONPATH=src python examples/fed_finetune.py --scheduler semisync
+  PYTHONPATH=src python examples/fed_finetune.py --population 5000 \\
+      --sample-rate 0.002 --edges 4 --codec int8 --rounds 4
 """
 import argparse
 
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.fed import (AsyncConfig, BufferedAsync, SemiSync, ServerConfig,
-                       SimConfig, SyncRound, run_centralized,
-                       run_experiment)
+from repro.fed import (AsyncConfig, BufferedAsync, ClientPopulation,
+                       FedSession, HierarchicalTopology, SemiSync,
+                       ServerConfig, SimConfig, SyncRound, make_cohort_train,
+                       run_centralized, run_experiment)
 from repro.fed.simulation import pretrain_backbone
+from repro.optim import adamw
 
 
-def make_scheduler(name: str, num_clients: int, cohort: int):
+def make_scheduler(name: str, num_clients: int, cohort: int, edges: int = 0):
     speeds = np.linspace(0.5, 2.0, num_clients)
     if name == "sync":
-        return SyncRound()
+        topo = HierarchicalTopology(num_edges=edges) if edges else None
+        return SyncRound(topology=topo)
+    if edges:
+        raise SystemExit("--edges needs the sync scheduler")
     if name == "semisync":
         return SemiSync(speeds=speeds, deadline_quantile=0.75)
     if name == "async":
         return BufferedAsync(speeds=speeds, buffer_size=cohort,
                              acfg=AsyncConfig(base_weight=0.5))
     raise ValueError(name)
+
+
+def run_population(cfg, sim, args):
+    """Sampled rounds over a lazily-materialized synthetic population:
+    only the cohort is ever resident, whatever ``--population`` says."""
+    pop = ClientPopulation.synthetic(args.population, task=args.task,
+                                     seed=args.seed,
+                                     vocab_size=cfg.vocab_size)
+    cohort = max(1, int(round(args.population * args.sample_rate)))
+    scfg = ServerConfig(num_clients=pop.size, clients_per_round=cohort,
+                        strategy="hlora", rank_policy="random",
+                        r_min=2, r_max=8, seed=args.seed, codec=args.codec)
+    base = pretrain_backbone(cfg, sim)
+    sess = FedSession(cfg, scfg, base, population=pop,
+                      sampler="rank_stratified")
+    sched = make_scheduler(args.scheduler, pop.size, cohort, args.edges)
+    h = sched.run(sess, make_cohort_train(cfg, adamw(sim.lr)),
+                  pop.data_fn(sim.local_steps, sim.local_batch), sim.rounds)
+    print(f"\n=== {args.task.upper()} population run: {pop.size} clients, "
+          f"cohort={cohort} ({args.scheduler}"
+          + (f", {args.edges} edges" if args.edges else "")
+          + f", codec={args.codec}) ===")
+    print("train_loss | " + " ".join(f"{x:.3f}" for x in h["train_loss"]))
+    print(f"materialized {pop.materialized_total} client shards total, "
+          f"max resident {pop.max_resident} (population never loaded)")
+    print(f"wire/round down={np.mean(h['downlink_bytes']) / 1e3:.0f}kB "
+          f"up={np.mean(h['uplink_bytes']) / 1e3:.0f}kB")
 
 
 def main():
@@ -43,6 +84,16 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scheduler", default="sync",
                     choices=["sync", "semisync", "async"])
+    ap.add_argument("--population", type=int, default=0, metavar="N",
+                    help="sample rounds from a lazy N-client population "
+                         "instead of the strategy comparison")
+    ap.add_argument("--sample-rate", type=float, default=0.01,
+                    help="cohort fraction of the population per round")
+    ap.add_argument("--edges", type=int, default=0, metavar="E",
+                    help="two-tier aggregation through E edge aggregators "
+                         "(0 = flat; sync scheduler only)")
+    ap.add_argument("--codec", default="none",
+                    help="wire codec: none, bf16, int8, topk[:k]")
     args = ap.parse_args()
 
     cfg = get_reduced("roberta-large")
@@ -50,6 +101,9 @@ def main():
                     rounds=args.rounds, local_steps=8, local_batch=16,
                     pretrain_steps=300, dirichlet_alpha=0.3, lr=1e-3,
                     seed=args.seed)
+    if args.population:
+        run_population(cfg, sim, args)
+        return
     base = pretrain_backbone(cfg, sim)
 
     runs = {}
@@ -62,11 +116,12 @@ def main():
             ("flora", "random", "FLoRA stacking r∈[2,8]")]:
         scfg = ServerConfig(num_clients=30, clients_per_round=10,
                             strategy=strat, rank_policy=policy,
-                            r_min=2, r_max=8, seed=args.seed)
+                            r_min=2, r_max=8, seed=args.seed,
+                            codec=args.codec)
         runs[label] = run_experiment(
             cfg, sim, scfg, base_params=base,
             scheduler=make_scheduler(args.scheduler, scfg.num_clients,
-                                     scfg.clients_per_round))
+                                     scfg.clients_per_round, args.edges))
 
     print(f"\n=== {args.task.upper()} eval accuracy "
           f"({args.scheduler} scheduler) ===")

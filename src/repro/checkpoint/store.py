@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 _BF16_TAG = "__bf16__"
+_BYTES_TAG = "__bytes__"
 
 
 def _flatten(tree, prefix="") -> Dict[str, Any]:
@@ -43,6 +44,11 @@ def save_pytree(path: str, tree) -> None:
     flat = _flatten(jax.device_get(tree))
     arrays = {}
     for k, v in flat.items():
+        if isinstance(v, (bytes, bytearray)):
+            # opaque byte-string leaves (e.g. serialized wire messages in
+            # a mid-flight async checkpoint) ride as tagged uint8
+            arrays[k + _BYTES_TAG] = np.frombuffer(bytes(v), np.uint8)
+            continue
         v = np.asarray(v)
         if v.dtype == jnp.bfloat16:
             arrays[k + _BF16_TAG] = v.view(np.uint16)
@@ -59,6 +65,8 @@ def load_pytree(path: str):
         v = data[k]
         if k.endswith(_BF16_TAG):
             flat[k[: -len(_BF16_TAG)]] = v.view(jnp.bfloat16)
+        elif k.endswith(_BYTES_TAG):
+            flat[k[: -len(_BYTES_TAG)]] = v.tobytes()
         else:
             flat[k] = v
     return _unflatten(flat)

@@ -1,7 +1,8 @@
-from repro.data.partition import (client_batches, dirichlet_partition,
-                                  iid_partition)
+from repro.data.partition import (LazyDirichlet, client_batches,
+                                  dirichlet_partition, iid_partition)
 from repro.data.synthetic import (TASKS, make_bigram_lm,
                                   make_pair_classification)
 
 __all__ = ["TASKS", "make_bigram_lm", "make_pair_classification",
-           "dirichlet_partition", "iid_partition", "client_batches"]
+           "dirichlet_partition", "LazyDirichlet", "iid_partition",
+           "client_batches"]

@@ -1,7 +1,12 @@
 from repro.fed.async_server import AsyncFedServer, simulate_async_rounds
 from repro.fed.client import (join_adapters, make_cohort_train,
                               make_local_train, split_adapters)
-from repro.fed.messages import Broadcast, ClientUpdate
+from repro.fed.compress import (Bf16Codec, Int8Codec, TopKCodec, WireCodec,
+                                codec_from_name)
+from repro.fed.messages import Broadcast, ClientUpdate, EdgeAggregate
+from repro.fed.population import (AvailabilityTraceSampler, ClientPopulation,
+                                  ClientSampler, RankStratifiedSampler,
+                                  UniformSampler, sampler_from_name)
 from repro.fed.schedulers import BufferedAsync, Scheduler, SemiSync, SyncRound
 from repro.fed.server import FedServer
 from repro.fed.session import (AsyncConfig, FedSession, ServerConfig,
@@ -9,14 +14,21 @@ from repro.fed.session import (AsyncConfig, FedSession, ServerConfig,
 from repro.fed.simulation import (SimConfig, rounds_to_target,
                                   run_centralized, run_experiment)
 from repro.fed.strategies import (AggregationStrategy, FLoRAStacking, HLoRA,
-                                  NaiveAvg)
+                                  NaiveAvg, register_strategy)
+from repro.fed.topology import HierarchicalTopology
 
 __all__ = [
     # unified session API
     "FedSession", "ServerConfig", "AsyncConfig", "assign_ranks",
     "AggregationStrategy", "NaiveAvg", "HLoRA", "FLoRAStacking",
+    "register_strategy",
     "Scheduler", "SyncRound", "SemiSync", "BufferedAsync",
-    "Broadcast", "ClientUpdate",
+    "Broadcast", "ClientUpdate", "EdgeAggregate",
+    # population-scale federation
+    "ClientPopulation", "ClientSampler", "UniformSampler",
+    "RankStratifiedSampler", "AvailabilityTraceSampler",
+    "sampler_from_name", "HierarchicalTopology",
+    "WireCodec", "TopKCodec", "Int8Codec", "Bf16Codec", "codec_from_name",
     # experiment drivers
     "SimConfig", "run_experiment", "run_centralized", "rounds_to_target",
     # client-side helpers

@@ -31,10 +31,12 @@ from __future__ import annotations
 import json
 import struct
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro.fed.compress import WireCodec, decoder_for
 
 _WIRE_VERSION = 1
 _BF16 = "bfloat16"
@@ -156,6 +158,40 @@ def _split_payload(arrays: Dict[str, np.ndarray]
     return adapter, head
 
 
+def _encode_payload(adapter: AdapterPayload, head: HeadPayload,
+                    codec: Optional[WireCodec]
+                    ) -> Tuple[Dict[str, np.ndarray], dict]:
+    """Flatten (adapter, head) into wire arrays; with a codec the adapter
+    crosses the wire encoded (under ``codec/``) plus a self-describing
+    header entry. ``codec=None`` is byte-identical to the raw format."""
+    if codec is None:
+        return _flatten_payload(adapter, head), {}
+    enc, cmeta = codec.encode_adapter(adapter)
+    arrays = {f"codec/{p}": a for p, a in enc.items()}
+    for k, a in (head or {}).items():
+        arrays[f"head/{k}"] = a
+    return arrays, {"codec": codec.name, "codec_meta": cmeta}
+
+
+def _decode_payload(arrays: Dict[str, np.ndarray], meta: dict
+                    ) -> Tuple[AdapterPayload, HeadPayload]:
+    """Inverse of :func:`_encode_payload`, driven purely by the header —
+    the receiver needs no codec configuration (self-describing wire)."""
+    if "codec" not in meta:
+        return _split_payload(arrays)
+    enc: Dict[str, np.ndarray] = {}
+    head: HeadPayload = {}
+    for path, a in arrays.items():
+        tag, rest = path.split("/", 1)
+        if tag == "codec":
+            enc[rest] = a
+        else:
+            head[rest] = a
+    adapter = decoder_for(meta["codec"]).decode_adapter(
+        enc, meta["codec_meta"])
+    return adapter, head
+
+
 # ---------------------------------------------------------------------------
 # Messages
 # ---------------------------------------------------------------------------
@@ -175,15 +211,20 @@ class Broadcast:
     adapter: AdapterPayload
     head: HeadPayload = field(default_factory=dict)
     _raw: Optional[bytes] = field(default=None, repr=False, compare=False)
+    codec: Optional[WireCodec] = field(default=None, repr=False,
+                                       compare=False)
 
     kind = "broadcast"
 
     def to_bytes(self) -> bytes:
         if self._raw is None:
+            arrays, cmeta = _encode_payload(self.adapter, self.head,
+                                            self.codec)
             self._raw = pack_wire(
                 self.kind,
-                {"version": self.version, "client_id": self.client_id},
-                _flatten_payload(self.adapter, self.head))
+                {"version": self.version, "client_id": self.client_id,
+                 **cmeta},
+                arrays)
         return self._raw
 
     @classmethod
@@ -191,7 +232,7 @@ class Broadcast:
         kind, meta, arrays = unpack_wire(data)
         if kind != cls.kind:
             raise ValueError(f"expected {cls.kind!r} message, got {kind!r}")
-        adapter, head = _split_payload(arrays)
+        adapter, head = _decode_payload(arrays, meta)
         return cls(version=meta["version"], client_id=meta["client_id"],
                    adapter=adapter, head=head, _raw=bytes(data))
 
@@ -215,17 +256,22 @@ class ClientUpdate:
     adapter: AdapterPayload
     head: HeadPayload = field(default_factory=dict)
     _raw: Optional[bytes] = field(default=None, repr=False, compare=False)
+    codec: Optional[WireCodec] = field(default=None, repr=False,
+                                       compare=False)
 
     kind = "update"
 
     def to_bytes(self) -> bytes:
         if self._raw is None:
+            arrays, cmeta = _encode_payload(self.adapter, self.head,
+                                            self.codec)
             self._raw = pack_wire(
                 self.kind,
                 {"client_id": self.client_id,
                  "start_version": self.start_version,
-                 "num_examples": self.num_examples},
-                _flatten_payload(self.adapter, self.head))
+                 "num_examples": self.num_examples,
+                 **cmeta},
+                arrays)
         return self._raw
 
     @classmethod
@@ -233,7 +279,7 @@ class ClientUpdate:
         kind, meta, arrays = unpack_wire(data)
         if kind != cls.kind:
             raise ValueError(f"expected {cls.kind!r} message, got {kind!r}")
-        adapter, head = _split_payload(arrays)
+        adapter, head = _decode_payload(arrays, meta)
         return cls(client_id=meta["client_id"],
                    start_version=meta["start_version"],
                    num_examples=meta["num_examples"],
@@ -246,6 +292,54 @@ class ClientUpdate:
     def unpack(self, r_max: int):
         head = {k: jnp.asarray(v) for k, v in self.head.items()}
         return pad_adapter(self.adapter, r_max), head
+
+
+@dataclass
+class EdgeAggregate:
+    """Edge aggregator → root: one cohort's ``ClientUpdate``s concentrated
+    into a single wire message.
+
+    The 'stack' hierarchical mode is *lossless by construction*: the edge
+    forwards its clients' serialized updates verbatim (concatenated, with
+    per-update lengths in the header), so the root can reassemble the
+    exact per-client trees and run the same flat aggregation — this is
+    what makes two-tier aggregation bit-identical to flat (tested). The
+    'engine' mode ships one pre-merged ``ClientUpdate`` per edge instead;
+    that message is the one that actually shrinks edge→root traffic.
+    """
+    edge_id: int
+    updates: List["ClientUpdate"]
+    _raw: Optional[bytes] = field(default=None, repr=False, compare=False)
+
+    kind = "edge_aggregate"
+
+    def to_bytes(self) -> bytes:
+        if self._raw is None:
+            blobs = [u.to_bytes() for u in self.updates]
+            blob = np.frombuffer(b"".join(blobs), np.uint8)
+            self._raw = pack_wire(
+                self.kind,
+                {"edge_id": int(self.edge_id),
+                 "lengths": [len(b) for b in blobs]},
+                {"blob": blob})
+        return self._raw
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "EdgeAggregate":
+        kind, meta, arrays = unpack_wire(data)
+        if kind != cls.kind:
+            raise ValueError(f"expected {cls.kind!r} message, got {kind!r}")
+        raw = arrays["blob"].tobytes()
+        updates, off = [], 0
+        for ln in meta["lengths"]:
+            updates.append(ClientUpdate.from_bytes(raw[off:off + ln]))
+            off += ln
+        return cls(edge_id=meta["edge_id"], updates=updates,
+                   _raw=bytes(data))
+
+    @property
+    def num_bytes(self) -> int:
+        return len(self.to_bytes())
 
 
 def payload_bytes(msg) -> int:

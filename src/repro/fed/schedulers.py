@@ -60,8 +60,14 @@ def _eval_round(history, session, eval_fn, do_eval: bool) -> None:
 
 @dataclass
 class SyncRound(Scheduler):
-    """Synchronous cohort rounds (the paper's mode)."""
+    """Synchronous cohort rounds (the paper's mode).
+
+    ``topology`` (a :class:`~repro.fed.topology.HierarchicalTopology`)
+    replaces the flat collect+aggregate with the two-tier edge/root path;
+    ``None`` is the original flat round, bit-for-bit (golden-tested)."""
     name = "sync"
+
+    topology: Optional[object] = None
 
     def run(self, session, train, data_fn, num_rounds: int,
             eval_fn=None, eval_every: int = 1) -> Dict[str, List]:
@@ -86,10 +92,15 @@ class SyncRound(Scheduler):
             if rec.enabled:
                 rec.complete("train", "fed.train", t_tr, rec.now(),
                              round=rnd, cohort=len(cohort))
-            tree, up_heads = session.collect_updates(
-                cohort, join_adapters(trainable["factors"], masks),
-                trainable["head"])
-            session.aggregate_round(tree, cohort, stacked_heads=up_heads)
+            trained = join_adapters(trainable["factors"], masks)
+            if self.topology is not None:
+                self.topology.aggregate(session, cohort, trained,
+                                        trainable["head"])
+            else:
+                tree, up_heads = session.collect_updates(
+                    cohort, trained, trainable["head"])
+                session.aggregate_round(tree, cohort,
+                                        stacked_heads=up_heads)
             if rec.enabled:
                 t1 = rec.now()
                 rec.complete(f"round{rnd}", "fed.rounds", t_rnd, t1,
@@ -195,12 +206,22 @@ class BufferedAsync(Scheduler):
     """K-buffered staleness-discounted asynchronous merging.
 
     ``acfg=None`` (default) uses the session's own staleness policy; an
-    explicit AsyncConfig here overrides it for the run."""
+    explicit AsyncConfig here overrides it for the run.
+
+    The live event heap / pending adapters / K-buffer are installed on
+    ``session.async_state`` and mutated in place, so ``session.save()``
+    can checkpoint a run *mid-flight* and a restored session resumes the
+    event sequence exactly (heap order, staleness, buffer contents —
+    bit-identical, tested). A fresh run cold-starts only when the session
+    carries no async state. ``drain=False`` leaves a partial buffer
+    unflushed at the end of ``run`` — the setting that makes a split run
+    (run → save → restore → run) equal one uninterrupted run."""
     name = "buffered_async"
 
     speeds: np.ndarray = None
     buffer_size: int = 1
     acfg: Optional[AsyncConfig] = None
+    drain: bool = True
 
     def run(self, session, local_train, data_fn, num_events: int,
             eval_fn=None, eval_every: Optional[int] = None
@@ -224,17 +245,25 @@ class BufferedAsync(Scheduler):
              eval_fn, eval_every) -> Dict[str, List]:
         speeds = np.asarray(self.speeds, np.float64)
         n = session.scfg.num_clients
-        heap: List[Tuple[float, int, int]] = []  # (finish, cid, version)
-        pending: Dict[int, Dict] = {}
-        for cid in range(n):
-            ad, ver = session.adapter_for(cid)
-            pending[cid] = ad
-            heapq.heappush(heap, (1.0 / speeds[cid], cid, ver))
+        if session.async_state is None:
+            heap: List[Tuple[float, int, int]] = []  # (finish, cid, ver)
+            pending: Dict[int, Dict] = {}
+            buffer: List = []
+            for cid in range(n):
+                ad, ver = session.adapter_for(cid)
+                pending[cid] = ad
+                heapq.heappush(heap, (1.0 / speeds[cid], cid, ver))
+            session.async_state = {"heap": heap, "pending": pending,
+                                   "buffer": buffer}
+        else:
+            # resume mid-flight (restored checkpoint or a previous run's
+            # live state): the heap list is already heap-ordered
+            st = session.async_state
+            heap, pending, buffer = st["heap"], st["pending"], st["buffer"]
         history: Dict[str, List] = {
             "time": [], "staleness": [], "accepted": [], "flush_events": [],
             "downlink_bytes": [], "uplink_bytes": [],
             "eval_acc": [], "eval_loss": [], "health": []}
-        buffer: List = []
         comm_seen = {k: sum(v) for k, v in session.comm_log.items()}
 
         def flush():
@@ -286,5 +315,6 @@ class BufferedAsync(Scheduler):
                 tot = sum(session.comm_log[key])
                 history[col].append(tot - comm_seen[key])
                 comm_seen[key] = tot
-        flush()                                  # drain a partial buffer
+        if self.drain:
+            flush()                              # drain a partial buffer
         return history

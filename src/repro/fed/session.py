@@ -46,8 +46,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import agg_engine
 from repro.core import rank as rank_lib
+from repro.fed import compress as compress_lib
 from repro.fed import messages as msg_lib
 from repro.fed import strategies as strat_lib
+from repro.fed.population import sampler_from_name
 from repro.models import transformer as tf_lib
 from repro.obs import NULL_RECORDER, MetricsRegistry, percentile
 
@@ -75,6 +77,10 @@ class ServerConfig:
     r_min: int = 2
     r_max: int = 8
     seed: int = 0
+    # Wire codec for every Broadcast/ClientUpdate ("none" keeps the
+    # message path byte-identical to the raw format): none | bf16 |
+    # int8 | topk[:k]  (fed/compress.py)
+    codec: str = "none"
 
 
 @dataclass
@@ -114,7 +120,10 @@ class FedSession:
                  track_comm: bool = True,
                  mesh=None,
                  recorder=None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 population=None,
+                 sampler=None,
+                 codec=None):
         from repro.fed.client import split_head
         self.cfg = cfg
         self.scfg = scfg
@@ -128,11 +137,32 @@ class FedSession:
         self.base = frozen
         self.global_head = head   # task head: FedAvg'd in-session
         self.rng = np.random.default_rng(scfg.seed)
+        # Population-scale mode (fed/population.py): client metadata
+        # (sizes/ranks) comes from the lazily-materialized population,
+        # shard data is built per round by the data_fn — the session
+        # itself only ever holds the sampled cohort's updates.
+        self.population = population
+        self.sampler = sampler_from_name(sampler)
+        if population is not None:
+            if population.size != scfg.num_clients:
+                raise ValueError(
+                    f"population has {population.size} clients but "
+                    f"scfg.num_clients={scfg.num_clients}")
+            if client_sizes is None:
+                client_sizes = population.num_examples
+        elif self.sampler is not None:
+            raise ValueError("a sampler needs a population")
         self.client_sizes = np.asarray(
             client_sizes if client_sizes is not None
             else np.full(scfg.num_clients, 64), np.int64)
         self.ranks = assign_ranks(scfg, self.client_sizes, capacities,
                                   self.rng)
+        if population is not None and population.ranks is not None:
+            self.ranks = population.ranks.astype(np.int32).copy()
+        # Wire codec applied to every Broadcast/ClientUpdate; None keeps
+        # the message bytes identical to the raw format (golden-safe).
+        self.codec = compress_lib.from_name(
+            codec if codec is not None else getattr(scfg, "codec", "none"))
         # Global adapter at full rank (A gaussian, B zero => ΔW = 0).
         self.global_lora = tf_lib.init_lora(jax.random.PRNGKey(scfg.seed),
                                             cfg)
@@ -174,20 +204,44 @@ class FedSession:
         self.health_log: List[Dict[str, float]] = []
         self.health_z_threshold: float = 3.0
         self._health_seen: Dict[str, float] = {}
+        if population is not None and population.metrics is None:
+            population.metrics = self.metrics
+        # Live BufferedAsync scheduler state ({heap, pending, buffer}),
+        # installed by the scheduler and serialized by save/restore so a
+        # long async run can checkpoint mid-flight (exactly).
+        self.async_state: Optional[dict] = None
 
-    def _log_comm(self, direction: str, nbytes: int) -> None:
+    def _log_comm(self, direction: str, nbytes: int,
+                  track: str = "fed.wire") -> None:
         """The one comm accounting choke point: the historical per-call
         ``comm_log`` rows, a registry byte counter, and (recording on) a
-        wire-traffic counter sample on the shared timeline."""
-        self.comm_log[direction].append(nbytes)
+        wire-traffic counter sample on the shared timeline. New
+        directions (e.g. the topology's per-edge ``edge<i>_uplink``)
+        create their own log column and counter; ``track`` routes their
+        timeline samples onto per-edge tracks."""
+        self.comm_log.setdefault(direction, []).append(nbytes)
         self.metrics.counter(f"fed.{direction}_bytes").inc(int(nbytes))
         if self.rec.enabled:
-            self.rec.counter_sample(f"fed.{direction}_bytes", "fed.wire",
+            self.rec.counter_sample(f"fed.{direction}_bytes", track,
                                     int(nbytes))
 
     # -- cohort handling ----------------------------------------------------
 
     def sample_cohort(self) -> np.ndarray:
+        """Pick this round's cohort. With a sampler (population mode) the
+        pluggable policy draws from the session rng — same seeded stream,
+        so runs stay bit-reproducible; the default is the original
+        uniform draw, untouched (golden-tested)."""
+        if self.sampler is not None:
+            cohort = np.asarray(self.sampler.sample(
+                self.population, self.rng, self.rounds_done,
+                self.scfg.clients_per_round), np.int64)
+            if self.rec.enabled:
+                self.rec.instant("cohort_sampled", "fed.server",
+                                 sampler=self.sampler.name,
+                                 cohort=len(cohort),
+                                 round=self.rounds_done)
+            return cohort
         return self.rng.choice(self.scfg.num_clients,
                                size=self.scfg.clients_per_round,
                                replace=False)
@@ -262,7 +316,8 @@ class FedSession:
         return msg_lib.Broadcast(version=self.version, client_id=int(cid),
                                  adapter=payload,
                                  head={k: np.asarray(v) for k, v
-                                       in self.global_head.items()})
+                                       in self.global_head.items()},
+                                 codec=self.codec)
 
     @staticmethod
     def _stack_clients(per_client, heads):
@@ -329,7 +384,8 @@ class FedSession:
             client_id=int(cid), start_version=int(start_version),
             num_examples=int(self.client_sizes[int(cid)]),
             adapter=msg_lib.truncate_adapter(trained_lora, ranks),
-            head={k: np.asarray(v) for k, v in (head or {}).items()})
+            head={k: np.asarray(v) for k, v in (head or {}).items()},
+            codec=self.codec)
         # num_bytes serializes lazily — only measure when tracking, so
         # track_comm=False skips the buffer build here too
         if log:
@@ -370,15 +426,19 @@ class FedSession:
     # -- aggregation ---------------------------------------------------------
 
     def aggregate_round(self, stacked_trained, cohort: np.ndarray,
-                        stacked_heads=None) -> None:
+                        stacked_heads=None, weights=None) -> None:
         """Synchronous cohort merge: one engine call (Eq. 2 + 3 under
         hlora/flora, Eq. 1 under naive), output at full rank r_max;
         redistribution happens lazily in ``redistribute``. Task heads are
         FedAvg'd with the same cohort weights under every strategy, so the
-        comparison isolates the adapter aggregation."""
+        comparison isolates the adapter aggregation. ``weights`` overrides
+        the per-client data weights when the stacked items are not the
+        cohort itself — the hierarchical root merge passes per-edge
+        weights ``n_e/Σn_e`` over pre-merged edge aggregates."""
         with self.rec.span("aggregate", "fed.server", cohort=len(cohort),
                            round=self.rounds_done):
-            eta = self.cohort_weights(cohort)
+            eta = self.cohort_weights(cohort) if weights is None \
+                else jnp.asarray(weights, jnp.float32)
             if stacked_heads:
                 self.global_head = jax.tree.map(
                     lambda x: jnp.tensordot(eta, x.astype(jnp.float32),
@@ -630,6 +690,8 @@ class FedSession:
         tree = {"global_lora": self.global_lora,
                 "global_head": self.global_head,
                 "ranks": np.asarray(self.ranks, np.int32)}
+        if self.async_state is not None:
+            tree["async"] = self._pack_async_state()
         meta = {
             "rounds_done": self.rounds_done,
             "version": self.version,
@@ -642,6 +704,39 @@ class FedSession:
         }
         return store.save(ckpt_dir, self.rounds_done + self.version
                           if step is None else step, tree, meta)
+
+    def _pack_async_state(self) -> dict:
+        """Serialize the live ``BufferedAsync`` state for save().
+
+        The heap is stored in its *list* order — a valid heap list is its
+        own heapified form, so the restored list pops in the identical
+        order. The K-buffer's ``ClientUpdate``s are stored as their raw
+        wire bytes (checkpoint/store.py round-trips bytes leaves), which
+        preserves them bit-exactly including any codec encoding."""
+        st = self.async_state
+        heap = st["heap"]
+        return {
+            "heap": {
+                "t": np.asarray([h[0] for h in heap], np.float64),
+                "cid": np.asarray([h[1] for h in heap], np.int64),
+                "ver": np.asarray([h[2] for h in heap], np.int64)},
+            "pending": {f"{int(cid):08d}": tree
+                        for cid, tree in st["pending"].items()},
+            "buffer": {f"{i:06d}": u.to_bytes()
+                       for i, u in enumerate(st["buffer"])},
+        }
+
+    @staticmethod
+    def _unpack_async_state(packed: dict) -> dict:
+        heap = [(float(t), int(c), int(v))
+                for t, c, v in zip(packed["heap"]["t"],
+                                   packed["heap"]["cid"],
+                                   packed["heap"]["ver"])]
+        pending = {int(k): jax.tree.map(jnp.asarray, tree)
+                   for k, tree in packed.get("pending", {}).items()}
+        buffer = [msg_lib.ClientUpdate.from_bytes(packed["buffer"][k])
+                  for k in sorted(packed.get("buffer", {}))]
+        return {"heap": heap, "pending": pending, "buffer": buffer}
 
     @classmethod
     def restore(cls, ckpt_dir: str, cfg: ModelConfig, scfg: ServerConfig,
@@ -675,4 +770,6 @@ class FedSession:
         cl = meta.get("comm_log")
         if cl:
             sess.comm_log = {k: list(v) for k, v in cl.items()}
+        if "async" in tree:
+            sess.async_state = cls._unpack_async_state(tree["async"])
         return sess

@@ -92,6 +92,22 @@ class FLoRAStacking(AggregationStrategy):
     has_spectrum: bool = True
 
 
+#: user-registered strategies (``register_strategy``), resolved by
+#: ``from_name`` after the built-ins
+_REGISTRY: dict = {}
+
+
+def register_strategy(strategy: AggregationStrategy) -> AggregationStrategy:
+    """Make a custom strategy resolvable from string configs
+    (``ServerConfig.strategy = strategy.name``). Built-in names are
+    reserved. Returns the strategy, so it composes as a decorator-style
+    one-liner next to the class definition."""
+    if strategy.name in ("naive", "hlora", "flora"):
+        raise ValueError(f"{strategy.name!r} is a built-in strategy name")
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
 def from_name(name: str, scfg=None) -> AggregationStrategy:
     """Resolve a ``ServerConfig.strategy`` string to a strategy object.
 
@@ -106,5 +122,9 @@ def from_name(name: str, scfg=None) -> AggregationStrategy:
         return HLoRA()
     if name == "flora":
         return FLoRAStacking()
+    if name in _REGISTRY:
+        return _REGISTRY[name]
     raise ValueError(f"unknown aggregation strategy {name!r}; "
-                     f"known: naive, hlora, flora")
+                     f"known: naive, hlora, flora"
+                     + (f", {', '.join(sorted(_REGISTRY))}"
+                        if _REGISTRY else ""))

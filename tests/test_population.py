@@ -1,0 +1,315 @@
+"""Population-scale federation: lazy client materialization, pluggable
+round samplers, and the two-tier hierarchical topology.
+
+Pins the subsystem's two load-bearing guarantees:
+
+* a sampled round over a 10k-client population never materializes more
+  than the cohort (``max_resident`` witness), and
+* two-tier 'stack' aggregation is **bit-identical** to flat aggregation
+  (naive + hlora), while 'engine' mode is weight-correct for linear
+  strategies.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.data import LazyDirichlet, dirichlet_partition
+from repro.data.synthetic import make_pair_classification
+from repro.fed import (AvailabilityTraceSampler, ClientPopulation,
+                       FedSession, HierarchicalTopology,
+                       RankStratifiedSampler, ServerConfig, SimConfig,
+                       SyncRound, UniformSampler, make_cohort_train,
+                       sampler_from_name)
+from repro.fed.simulation import make_experiment_setup, pretrain_backbone
+from repro.optim import adamw
+
+ALPHA_SIM = SimConfig(task="mrpc", num_examples=512, eval_examples=128,
+                      rounds=3, local_steps=2, local_batch=8,
+                      pretrain_steps=20, lr=1e-3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced("roberta-large")
+
+
+@pytest.fixture(scope="module")
+def base(cfg):
+    return pretrain_backbone(cfg, ALPHA_SIM)
+
+
+# ---------------------------------------------------------------------------
+# LazyDirichlet: cut-table partition == eager partition, O(1) per client
+# ---------------------------------------------------------------------------
+
+def test_lazy_dirichlet_matches_eager_partition():
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, 4, size=400).astype(np.int32)
+    eager = dirichlet_partition(labels, 20, alpha=0.5, seed=3, min_size=0)
+    lazy = LazyDirichlet(labels, 20, alpha=0.5, seed=3)
+    np.testing.assert_array_equal(lazy.sizes,
+                                  np.asarray([len(s) for s in eager]))
+    for cid in range(20):
+        np.testing.assert_array_equal(lazy.indices_for(cid), eager[cid],
+                                      err_msg=f"client {cid}")
+
+
+def test_population_from_partition_shards_match_eager():
+    tokens, labels = make_pair_classification("mrpc", 300, seed=1,
+                                              vocab_size=256)
+    pop = ClientPopulation.from_partition(tokens, labels, num_clients=10,
+                                          alpha=0.5, seed=1)
+    eager = dirichlet_partition(labels, 10, alpha=0.5, seed=1, min_size=0)
+    assert pop.size == 10
+    t5, l5 = pop.materialize(5)
+    np.testing.assert_array_equal(t5, tokens[eager[5]])
+    np.testing.assert_array_equal(l5, labels[eager[5]])
+    assert pop.ranks is not None and len(pop.ranks) == 10
+    pop.release()
+    assert pop.resident() == 0
+
+
+# ---------------------------------------------------------------------------
+# Samplers: determinism under the session seed, stratification, availability
+# ---------------------------------------------------------------------------
+
+def _meta_population(n=200, seed=0):
+    """Metadata-only population: shard_fn must never be called."""
+    def boom(cid):
+        raise AssertionError("sampler materialized a shard")
+    rng = np.random.default_rng(seed)
+    ranks = rng.integers(2, 9, size=n)
+    return ClientPopulation(boom, np.full(n, 64), ranks=ranks, seed=seed)
+
+
+def test_samplers_deterministic_under_fixed_seed():
+    pop = _meta_population()
+    for sampler in (UniformSampler(), RankStratifiedSampler(),
+                    AvailabilityTraceSampler.diurnal(200, seed=1)):
+        seqs = []
+        for _ in range(2):
+            rng = np.random.default_rng(42)
+            seqs.append([sampler.sample(pop, rng, rnd, 10).tolist()
+                        for rnd in range(5)])
+        assert seqs[0] == seqs[1], sampler.name
+        # a different seed must actually change the draw somewhere
+        rng = np.random.default_rng(43)
+        other = [sampler.sample(pop, rng, rnd, 10).tolist()
+                 for rnd in range(5)]
+        assert other != seqs[0], sampler.name
+
+
+def test_rank_stratified_covers_every_bucket():
+    pop = _meta_population()
+    values = np.unique(pop.ranks)
+    rng = np.random.default_rng(0)
+    cohort = RankStratifiedSampler().sample(pop, rng, 0, 10)
+    assert len(cohort) == 10 and len(np.unique(cohort)) == 10
+    assert set(pop.ranks[cohort]) == set(values)   # k >= #buckets: all in
+    # quotas are proportional: the dominant bucket gets the most slots
+    counts = {v: int((pop.ranks[cohort] == v).sum()) for v in values}
+    sizes = {v: int((pop.ranks == v).sum()) for v in values}
+    assert counts[max(sizes, key=sizes.get)] >= max(counts.values()) - 1
+
+
+def test_rank_stratified_small_cohort_edge():
+    pop = _meta_population()
+    rng = np.random.default_rng(0)
+    cohort = RankStratifiedSampler().sample(pop, rng, 0, 3)
+    assert len(cohort) == 3 and len(np.unique(cohort)) == 3
+    # rank metadata is required
+    nor = ClientPopulation(lambda c: None, np.full(8, 64))
+    with pytest.raises(ValueError, match="ranks"):
+        RankStratifiedSampler().sample(nor, rng, 0, 2)
+
+
+def test_availability_sampler_gates_on_trace():
+    trace = np.array([[1, 0], [1, 0], [0, 1]], bool)
+    pop = ClientPopulation(lambda c: None, np.full(3, 64))
+    sampler = AvailabilityTraceSampler(trace)
+    rng = np.random.default_rng(0)
+    assert set(sampler.sample(pop, rng, 0, 2)) <= {0, 1}
+    assert sampler.sample(pop, rng, 1, 2).tolist() == [2]
+    assert set(sampler.sample(pop, rng, 2, 2)) <= {0, 1}  # round % period
+    # all-offline tick: uniform fallback, the round never stalls
+    dead = AvailabilityTraceSampler(np.zeros((3, 2), bool))
+    assert len(dead.sample(pop, rng, 0, 2)) == 2
+    with pytest.raises(ValueError, match="bool"):
+        AvailabilityTraceSampler(np.zeros(3))
+
+
+def test_sampler_from_name_resolution():
+    assert sampler_from_name(None) is None
+    assert sampler_from_name("none") is None
+    assert isinstance(sampler_from_name("uniform"), UniformSampler)
+    assert isinstance(sampler_from_name("rank_stratified"),
+                      RankStratifiedSampler)
+    s = UniformSampler()
+    assert sampler_from_name(s) is s
+    with pytest.raises(ValueError, match="unknown sampler"):
+        sampler_from_name("power_of_choice")
+
+
+def test_session_requires_population_for_sampler(cfg, base):
+    scfg = ServerConfig(num_clients=4, clients_per_round=2, seed=0)
+    with pytest.raises(ValueError, match="population"):
+        FedSession(cfg, scfg, base, client_sizes=[32] * 4,
+                   sampler="uniform")
+    pop = ClientPopulation.synthetic(8, seed=0)
+    with pytest.raises(ValueError, match="num_clients"):
+        FedSession(cfg, scfg, base, population=pop)
+
+
+# ---------------------------------------------------------------------------
+# Lazy materialization: a 10k-client population, one sampled round
+# ---------------------------------------------------------------------------
+
+def test_ten_thousand_client_round_is_memory_bounded(cfg, base):
+    """Acceptance gate: a full sampled training round over a 10k-client
+    population materializes only the cohort — never the population."""
+    n = 10_000
+    pop = ClientPopulation.synthetic(n, seed=0,
+                                     vocab_size=cfg.vocab_size)
+    assert pop.size == n and pop.materialized_total == 0
+    scfg = ServerConfig(num_clients=n, clients_per_round=4,
+                        strategy="hlora", rank_policy="random",
+                        r_min=2, r_max=8, seed=0)
+    sess = FedSession(cfg, scfg, base, population=pop,
+                      sampler="rank_stratified")
+    # client metadata comes from the population, not a default fill
+    np.testing.assert_array_equal(sess.client_sizes, pop.num_examples)
+    np.testing.assert_array_equal(sess.ranks, pop.ranks)
+    cohort_train = make_cohort_train(cfg, adamw(1e-3))
+    h = SyncRound().run(sess, cohort_train, pop.data_fn(1, 4), 1)
+    assert np.isfinite(h["train_loss"]).all()
+    assert h["downlink_bytes"][0] > 0 and h["uplink_bytes"][0] > 0
+    # the memory-boundedness witness
+    assert pop.materialized_total == 4
+    assert pop.max_resident <= scfg.clients_per_round
+    assert pop.resident() == 0
+    assert sess.metrics.counter("fed.population.materialized").value == 4
+
+
+def test_population_round_data_deterministic(cfg):
+    pop = ClientPopulation.synthetic(50, seed=3, vocab_size=cfg.vocab_size)
+    cohort = np.array([4, 17, 23])
+    d1 = pop.round_data(cohort, rnd=2, local_steps=2, local_batch=4)
+    d2 = pop.round_data(cohort, rnd=2, local_steps=2, local_batch=4)
+    assert d1["tokens"].shape == (3, 2, 4, d1["tokens"].shape[-1])
+    np.testing.assert_array_equal(np.asarray(d1["tokens"]),
+                                  np.asarray(d2["tokens"]))
+    d3 = pop.round_data(cohort, rnd=3, local_steps=2, local_batch=4)
+    assert not np.array_equal(np.asarray(d1["tokens"]),
+                              np.asarray(d3["tokens"]))
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical topology: stack mode bit-identical to flat (the golden)
+# ---------------------------------------------------------------------------
+
+def _run_pair(cfg, base, strategy, topology, rounds=2,
+              rank_policy="random"):
+    scfg = ServerConfig(num_clients=8, clients_per_round=4,
+                        strategy=strategy, rank_policy=rank_policy,
+                        r_min=2, r_max=8, seed=0)
+    sim = SimConfig(**{**ALPHA_SIM.__dict__, "rounds": rounds})
+    (kw, cohort_train, _local, data_fn, _cdata,
+     eval_fn) = make_experiment_setup(cfg, sim, scfg, base)
+    out = []
+    for topo in (None, topology):
+        sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"])
+        h = SyncRound(topology=topo).run(sess, cohort_train, data_fn,
+                                         rounds, eval_fn=eval_fn)
+        out.append((sess, h))
+    return out
+
+
+@pytest.mark.parametrize("strategy", ["naive", "hlora"])
+@pytest.mark.parametrize("assignment", ["contiguous", "hash"])
+def test_hierarchical_stack_bit_identical_to_flat(cfg, base, strategy,
+                                                  assignment):
+    """Acceptance gate: two-tier 'stack' aggregation == flat aggregation,
+    bit-for-bit — same bytes in, same stacked tree, same engine call."""
+    topo = HierarchicalTopology(num_edges=2, assignment=assignment,
+                                edge_mode="stack")
+    (s_flat, h_flat), (s_hier, h_hier) = _run_pair(cfg, base, strategy,
+                                                   topo)
+    for k in ("round", "train_loss", "eval_acc", "eval_loss"):
+        assert h_flat[k] == h_hier[k], k
+    for t in s_flat.global_lora:
+        for leaf in ("A", "B", "mask"):
+            np.testing.assert_array_equal(
+                np.asarray(s_hier.global_lora[t][leaf]),
+                np.asarray(s_flat.global_lora[t][leaf]), err_msg=(t, leaf))
+    for k in s_flat.global_head:
+        np.testing.assert_array_equal(np.asarray(s_hier.global_head[k]),
+                                      np.asarray(s_flat.global_head[k]))
+    # the consolidated client->edge uplink row equals the flat uplink row
+    assert s_hier.comm_log["uplink"] == s_flat.comm_log["uplink"]
+    if assignment == "contiguous":   # hash may leave an edge empty
+        # per-edge wire accounting: one row per edge per round, and each
+        # edge message carries its clients' bytes plus a small envelope
+        for e in range(2):
+            rows = s_hier.comm_log[f"edge{e}_uplink"]
+            assert len(rows) == 2 and all(b > 0 for b in rows)
+        for i in range(2):
+            edges = (s_hier.comm_log["edge0_uplink"][i]
+                     + s_hier.comm_log["edge1_uplink"][i])
+            assert 0 < edges - s_hier.comm_log["uplink"][i] < 4096
+
+
+def test_hierarchical_engine_mode_weight_correct_for_naive(cfg, base):
+    """'engine' mode: nested weighted mean == flat weighted mean for the
+    linear strategy, and edge->root traffic shrinks to one pre-merged
+    update per edge."""
+    topo = HierarchicalTopology(num_edges=2, edge_mode="engine")
+    (s_flat, _h_f), (s_hier, _h_h) = _run_pair(
+        cfg, base, "naive", topo, rounds=1, rank_policy="uniform")
+    from repro.core import lora
+    for t in s_flat.global_lora:
+        dw_f = np.asarray(lora.delta_w(s_flat.global_lora[t],
+                                       cfg.lora.alpha))
+        dw_h = np.asarray(lora.delta_w(s_hier.global_lora[t],
+                                       cfg.lora.alpha))
+        np.testing.assert_allclose(dw_h, dw_f, rtol=1e-4, atol=1e-5,
+                                   err_msg=t)
+    for k in s_flat.global_head:
+        np.testing.assert_allclose(np.asarray(s_hier.global_head[k]),
+                                   np.asarray(s_flat.global_head[k]),
+                                   rtol=1e-5, atol=1e-6, err_msg=k)
+    # pre-merged edge messages: edge->root bytes < the client bytes they
+    # summarize (that is the fan-in win of engine mode)
+    edge_bytes = (s_hier.comm_log["edge0_uplink"][0]
+                  + s_hier.comm_log["edge1_uplink"][0])
+    assert edge_bytes < s_hier.comm_log["uplink"][0]
+
+
+def test_topology_assignment_partitions_cohort():
+    cohort = np.array([3, 9, 14, 2, 7, 21, 6])
+    for assignment in ("contiguous", "round_robin", "hash"):
+        topo = HierarchicalTopology(num_edges=3, assignment=assignment)
+        groups = topo.assign(cohort)
+        assert len(groups) == 3
+        merged = np.sort(np.concatenate(groups))
+        np.testing.assert_array_equal(merged, np.arange(len(cohort)))
+    with pytest.raises(ValueError, match="num_edges"):
+        HierarchicalTopology(num_edges=0)
+    with pytest.raises(ValueError, match="assignment"):
+        HierarchicalTopology(assignment="ring")
+    with pytest.raises(ValueError, match="edge_mode"):
+        HierarchicalTopology(edge_mode="tree")
+
+
+def test_hierarchical_respects_track_comm_off(cfg, base):
+    scfg = ServerConfig(num_clients=4, clients_per_round=4,
+                        strategy="naive", rank_policy="uniform", seed=0)
+    sim = SimConfig(**{**ALPHA_SIM.__dict__, "rounds": 1})
+    (kw, cohort_train, _local, data_fn, _cdata,
+     _ev) = make_experiment_setup(cfg, sim, scfg, base)
+    sess = FedSession(cfg, scfg, base, client_sizes=kw["client_sizes"],
+                      track_comm=False)
+    topo = HierarchicalTopology(num_edges=2, edge_mode="stack")
+    h = SyncRound(topology=topo).run(sess, cohort_train, data_fn, 1)
+    assert np.isfinite(h["train_loss"]).all()
+    assert sess.comm_log["uplink"] == [0]
+    assert sess.comm_log["edge0_uplink"] == [0]

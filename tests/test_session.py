@@ -631,3 +631,145 @@ def test_restored_session_spectrum_fallback(cfg, base, tmp_path):
         picked[split] = dict(restored.target_ranks)
     assert picked["paper"] == picked["sqrt"], picked
     assert picked["paper"]["q"] == 2 and picked["paper"]["v"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Mid-flight async checkpoint: save inside a BufferedAsync run, resume
+# bit-identically (heap order, pending adapters, K-buffer contents)
+# ---------------------------------------------------------------------------
+
+def test_buffered_async_midflight_resume_bitwise(cfg, base, tmp_path):
+    """A split async run (4 events -> save -> restore -> 3 events) must
+    equal one uninterrupted 7-event run bit-for-bit — including the
+    partial K-buffer crossing the checkpoint. ``drain=False`` is what
+    makes the split well-defined: the run boundary flushes nothing."""
+    from repro.data import make_pair_classification
+    from repro.data.partition import client_batches, iid_partition
+
+    scfg = ServerConfig(num_clients=4, clients_per_round=4,
+                        strategy="hlora", rank_policy="random",
+                        r_min=2, r_max=8, seed=0)
+    sim = SimConfig(**{**ALPHA_SIM.__dict__, "local_steps": 2})
+    _kw, local_train, _stateful = _async_setup(cfg, base, sim, scfg)
+    # a *stateless* data_fn (the stock client_data_fn draws from a shared
+    # call-order rng, which a resumed run cannot replay)
+    tokens, labels = make_pair_classification(
+        "mrpc", 256, seed=0, vocab_size=cfg.vocab_size)
+    shards = iid_partition(256, 4, seed=0)
+    sizes = [len(s) for s in shards]
+
+    def data_fn(cid):
+        return client_batches(tokens, labels, shards[cid], sim.local_steps,
+                              sim.local_batch, seed=777 + cid)
+
+    speeds = np.array([2.0, 1.0, 0.5, 0.25])
+    acfg = AsyncConfig(max_staleness=50)
+
+    def sched():
+        return BufferedAsync(speeds=speeds, buffer_size=3, acfg=acfg,
+                             drain=False)
+
+    sess_full = FedSession(cfg, scfg, base, client_sizes=sizes)
+    sched().run(sess_full, local_train, data_fn, num_events=7)
+
+    sess_a = FedSession(cfg, scfg, base, client_sizes=sizes)
+    sched().run(sess_a, local_train, data_fn, num_events=4)
+    # events 1-3 flushed; event 4 is live in the buffer at the split
+    assert sess_a.version == 3
+    assert len(sess_a.async_state["buffer"]) == 1
+    ckpt = str(tmp_path / "async")
+    sess_a.save(ckpt)
+
+    sess_b = FedSession.restore(ckpt, cfg, scfg, base, client_sizes=sizes)
+    st = sess_b.async_state
+    assert st is not None
+    assert st["heap"] == sess_a.async_state["heap"]
+    assert sorted(st["pending"]) == [0, 1, 2, 3]
+    assert len(st["buffer"]) == 1
+    # the buffered update survived the checkpoint byte-exactly
+    assert st["buffer"][0].to_bytes() == \
+        sess_a.async_state["buffer"][0].to_bytes()
+    sched().run(sess_b, local_train, data_fn, num_events=3)
+
+    assert sess_b.version == sess_full.version == 6
+    assert sess_b.staleness_log == sess_full.staleness_log
+    assert sess_b.async_state["heap"] == sess_full.async_state["heap"]
+    assert sess_b.async_state["buffer"][0].to_bytes() == \
+        sess_full.async_state["buffer"][0].to_bytes()
+    # wire accounting lines up event-for-event across the split
+    assert sess_b.comm_log["uplink"] == sess_full.comm_log["uplink"]
+    assert sess_b.comm_log["downlink"] == sess_full.comm_log["downlink"]
+    for t in sess_full.global_lora:
+        for leaf in ("A", "B", "mask"):
+            np.testing.assert_array_equal(
+                np.asarray(sess_b.global_lora[t][leaf]),
+                np.asarray(sess_full.global_lora[t][leaf]),
+                err_msg=(t, leaf))
+    for k in sess_full.global_head:
+        np.testing.assert_array_equal(np.asarray(sess_b.global_head[k]),
+                                      np.asarray(sess_full.global_head[k]))
+
+
+# ---------------------------------------------------------------------------
+# Deprecated front doors: warn once at construction, behave identically
+# ---------------------------------------------------------------------------
+
+def test_fedserver_shim_warns_and_matches_session(cfg, base):
+    from repro.fed import FedServer
+    scfg = ServerConfig(num_clients=4, clients_per_round=2,
+                        strategy="hlora", rank_policy="random",
+                        r_min=2, r_max=8, seed=0)
+    with pytest.warns(DeprecationWarning,
+                      match="FedSession with a SyncRound"):
+        srv = FedServer(cfg, scfg, base, client_sizes=[32] * 4)
+    sess = FedSession(cfg, scfg, base, client_sizes=[32] * 4)
+    np.testing.assert_array_equal(srv.sample_cohort(), sess.sample_cohort())
+    cohort = np.array([0, 2])
+    stacked = sess.redistribute(cohort)
+    legacy = srv.cohort_adapters(cohort)
+    key = jax.random.PRNGKey(5)
+    for i, t in enumerate(stacked):
+        for leaf in ("A", "B", "mask"):
+            np.testing.assert_array_equal(np.asarray(legacy[t][leaf]),
+                                          np.asarray(stacked[t][leaf]),
+                                          err_msg=(t, leaf))
+        b = jax.random.normal(jax.random.fold_in(key, i),
+                              stacked[t]["B"].shape) \
+            * stacked[t]["mask"][..., :, None]
+        stacked[t] = dict(stacked[t], B=b)
+        legacy[t] = dict(legacy[t], B=b)
+    srv.update_global(legacy, cohort)
+    sess.aggregate_round(stacked, cohort)
+    for t in sess.global_lora:
+        for leaf in ("A", "B", "mask"):
+            np.testing.assert_array_equal(
+                np.asarray(srv.global_lora[t][leaf]),
+                np.asarray(sess.global_lora[t][leaf]), err_msg=(t, leaf))
+
+
+def test_async_fedserver_shim_warns_and_matches_flush(cfg, base):
+    import types
+    scfg = ServerConfig(num_clients=2, clients_per_round=2,
+                        strategy="naive", rank_policy="uniform", seed=0)
+    with pytest.warns(DeprecationWarning, match="BufferedAsync"):
+        srv = AsyncFedServer(cfg, scfg, AsyncConfig(), base, [1.0, 1.0],
+                             client_sizes=[32, 32])
+    np.testing.assert_array_equal(srv.sizes, srv.client_sizes)  # legacy name
+    sess = FedSession(cfg, scfg, base, client_sizes=[32, 32],
+                      acfg=AsyncConfig())
+    ad, ver = srv.adapter_for(0)
+    key = jax.random.PRNGKey(8)
+    trained = {t: dict(a, B=jax.random.normal(
+        jax.random.fold_in(key, i), a["B"].shape)
+        * a["mask"][..., :, None]) for i, (t, a) in enumerate(ad.items())}
+    assert srv.submit(0, trained, ver) is True
+    flags = sess.flush_async([types.SimpleNamespace(
+        client_id=0, start_version=ver, num_examples=32,
+        adapter=trained, head=None)])
+    assert flags == [True]
+    assert srv.version == sess.version == 1
+    for t in sess.global_lora:
+        for leaf in ("A", "B", "mask"):
+            np.testing.assert_array_equal(
+                np.asarray(srv.global_lora[t][leaf]),
+                np.asarray(sess.global_lora[t][leaf]), err_msg=(t, leaf))

@@ -156,6 +156,21 @@ def test_bench_quick_smoke_all_sections(tmp_path):
     # per-round health snapshots rode along with the sync scheduler
     assert got["fed"]["obs_health_rounds"] > 0
     assert got["fed"]["obs_health_anomalies"] == 0.0
+    # hierarchical two-tier aggregation: stack mode is pinned bit-identical
+    # to flat, and the edge->root tier carries measured wire bytes
+    assert got["fed"]["hier_bit_identical"] == 1
+    assert got["fed"]["hier_edge_uplink_bytes_per_round"] > 0
+    assert got["fed"]["hier_engine_edge_bytes_per_round"] > 0
+    # population-scale round: lazy materialization never exceeds cohort
+    assert got["fed"]["pop_clients"] >= 2000
+    assert got["fed"]["pop_max_resident"] <= got["fed"]["pop_cohort"]
+    assert got["fed"]["pop_uplink_bytes_per_round"] > 0
+    # wire codec curve: none is exact, quantized/truncated curves are
+    # strictly cheaper than raw f32 (deterministic byte counts)
+    assert got["comm"]["codec_none_rel_err"] == 0.0
+    assert got["comm"]["codec_int8_bytes"] < got["comm"]["codec_bf16_bytes"]
+    assert got["comm"]["codec_bf16_bytes"] < got["comm"]["codec_none_bytes"]
+    assert got["comm"]["codec_topk2_bytes"] < got["comm"]["codec_none_bytes"]
     # every invocation appends to the perf history beside --out
     hist = str(tmp_path / "bench_history.jsonl")
     assert os.path.exists(hist)
