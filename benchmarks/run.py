@@ -56,7 +56,7 @@ from benchmarks import (bench_bias, bench_comm, bench_convergence,
                         bench_server, bench_svd)
 
 ALL = ("convergence", "bias", "server", "comm", "svd", "serve", "roofline",
-       "fed", "obs")
+       "fed", "obs", "analysis")
 
 # -- perf-regression gate ----------------------------------------------------
 #
@@ -193,9 +193,40 @@ def _run_convergence(args):
     return conv
 
 
+def _run_analysis(args):
+    """Invariant lint suite smoke: the CLI must list a healthy pass
+    registry (>=5 rules) and the shipped tree must lint clean — through
+    the real ``python -m repro.analysis`` entry point in a subprocess,
+    so a broken registry import or CLI regression fails the tier-1
+    smoke run instead of silently rotting."""
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env = dict(os.environ, PYTHONPATH=src + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    t0 = time.time()
+    ls = subprocess.run([sys.executable, "-m", "repro.analysis", "--list"],
+                        capture_output=True, text=True, env=env)
+    rules = [l for l in ls.stdout.splitlines() if " — " in l]
+    tree = subprocess.run([sys.executable, "-m", "repro.analysis",
+                           os.path.join(src, "repro")],
+                          capture_output=True, text=True, env=env)
+    if tree.returncode != 0:
+        print(tree.stdout)
+    res = {"rules_listed": len(rules),
+           "cli_list_rc": ls.returncode,
+           "tree_rc": tree.returncode,
+           "tree_clean": 1 if tree.returncode == 0 else 0,
+           "lint_s": round(time.time() - t0, 2)}
+    print(f"analysis,lint_full_tree,{res['rules_listed']} rules "
+          f"tree_clean={res['tree_clean']}")
+    return res
+
+
 def _runners(args):
     # declaration order == execution order (cheap sections first)
     return {
+        "analysis": lambda: _run_analysis(args),
         "comm": lambda: bench_comm.run(quick=args.quick),
         "obs": lambda: bench_obs.run(quick=args.quick),
         "svd": lambda: bench_svd.run(quick=args.quick),

@@ -1,0 +1,33 @@
+"""repro.analysis — AST-based invariant lint suite for the repro tree.
+
+Usage (library)::
+
+    from repro.analysis import run_paths, all_rules
+    findings = run_paths(["src/repro"])          # all rules
+    findings = run_paths(paths, rules=["clock-discipline"])
+
+Usage (CLI)::
+
+    python -m repro.analysis [--list] [--rule NAME] PATHS...
+
+Exit status: 0 when clean, 1 on findings, 2 on usage errors. See
+``src/repro/analysis/README.md`` for the rule catalog, pragma syntax,
+and how to add a pass. Importing this package registers every shipped
+pass (the modules self-register via the ``@register`` decorator).
+"""
+from repro.analysis.framework import (ALLOWLIST, Finding, LintPass,
+                                      ModuleContext, all_rules, get_rule,
+                                      iter_py_files, parse_pragmas, register,
+                                      run_paths)
+# importing a pass module registers its rule — keep this list in sync
+# with the catalog in README.md
+from repro.analysis import atomicwrite  # noqa: F401
+from repro.analysis import clock        # noqa: F401
+from repro.analysis import hashing      # noqa: F401
+from repro.analysis import rng          # noqa: F401
+from repro.analysis import tracing      # noqa: F401
+
+__all__ = [
+    "ALLOWLIST", "Finding", "LintPass", "ModuleContext", "all_rules",
+    "get_rule", "iter_py_files", "parse_pragmas", "register", "run_paths",
+]

@@ -1,0 +1,53 @@
+"""CLI: ``python -m repro.analysis [--list] [--rule NAME] PATHS...``
+
+Exit status: 0 clean, 1 findings, 2 usage error (argparse). The
+benchmark smoke tier runs ``--list`` so a broken pass registry fails
+tier-1 instead of silently rotting; tier-1 itself pins
+``run_paths(["src/repro"]) == []``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from repro.analysis import all_rules, get_rule, iter_py_files, run_paths
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="AST-based invariant lints for the repro tree")
+    ap.add_argument("paths", nargs="*", metavar="PATH",
+                    help="files or directories to lint")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered rules and exit")
+    ap.add_argument("--rule", action="append", default=None, metavar="NAME",
+                    help="run only this rule (repeatable)")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for p in all_rules():
+            print(f"{p.name} — {p.description}")
+        return 0
+    if not args.paths:
+        ap.error("no PATHS given (or use --list)")
+    if args.rule:
+        for r in args.rule:          # fail fast on a typo'd rule name
+            get_rule(r)
+
+    findings = run_paths(args.paths, rules=args.rule)
+    for fd in findings:
+        print(fd.render())
+    nfiles = len(iter_py_files(args.paths))
+    rules = ", ".join(args.rule) if args.rule else "all rules"
+    if findings:
+        print(f"\n{len(findings)} finding(s) across {nfiles} file(s) "
+              f"({rules})")
+        return 1
+    print(f"clean: {nfiles} file(s), {rules}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

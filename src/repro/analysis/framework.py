@@ -1,0 +1,251 @@
+"""Invariant lint framework: AST passes over the repro tree.
+
+The repo's correctness story rests on discipline rules that used to
+live in prose, one grep, and runtime witnesses: clocks only through
+``Recorder.now()``, randomness only from seed-derived
+``np.random.default_rng`` streams, no builtin ``hash()`` feeding
+enumeration order, retrace-free jitted hot paths, and atomic
+tmp + ``os.replace`` writes for results artifacts. Each of these is a
+cross-process wire contract once edges run as separate processes — the
+class of property heterogeneous-rank federated systems get wrong
+silently. This package makes a violation a *test failure at authoring
+time* instead of a flaky divergence at 10k clients.
+
+Architecture
+------------
+A *pass* is a subclass of :class:`LintPass` registered via
+:func:`register`. Each pass walks a parsed module (one ``ast`` tree per
+file, parsed once and shared across passes) and yields
+:class:`Finding` tuples ``(rule, path, line, col, message, hint)``.
+The runner filters findings through two suppression mechanisms:
+
+* **inline pragmas** — ``# repro: allow=<rule>[,<rule>...]`` on the
+  offending line, or on a comment-only line directly above it (for
+  sites where the pragma would not fit). Anything after the rule list
+  (e.g. a justification in parens) is ignored, so every pragma can —
+  and should — carry a one-line reason.
+* **path allowlist** — :data:`ALLOWLIST` maps a rule name to posix
+  path suffixes that are sanctioned wholesale (e.g. ``obs/recorder.py``
+  owns the clock, so clock-discipline never fires there).
+
+Findings are sorted ``(path, line, col, rule)`` so output is
+deterministic regardless of input path order or registry iteration
+order. Everything here is stdlib-``ast`` only (see
+``requirements-dev.txt``): the suite must run in tier-1 with no
+third-party linter installed.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence, Tuple
+
+__all__ = [
+    "Finding", "LintPass", "ModuleContext", "ImportMap", "register",
+    "all_rules", "get_rule", "run_paths", "iter_py_files", "dotted_name",
+    "parse_pragmas", "ALLOWLIST",
+]
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation, ordered for deterministic output."""
+    path: str          # normalized posix path, as discovered
+    line: int          # 1-based
+    col: int           # 0-based (ast convention)
+    rule: str
+    message: str = field(compare=False)
+    hint: str = field(compare=False, default="")
+
+    def render(self) -> str:
+        s = f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+        if self.hint:
+            s += f"\n    fix: {self.hint}"
+        return s
+
+
+#: rule -> posix path suffixes sanctioned wholesale. Kept deliberately
+#: tiny: the allowlist is for files whose *purpose* is the exemption
+#: (the recorder IS the clock); one-off sites use inline pragmas.
+ALLOWLIST: Dict[str, Tuple[str, ...]] = {
+    # obs/recorder.py owns the process clock: Recorder.now()/wall() are
+    # the sanctioned reads everything else must route through.
+    "clock-discipline": ("obs/recorder.py",),
+}
+
+_PRAGMA_RE = re.compile(r"#\s*repro:\s*allow=([\w,-]+)")
+
+
+def parse_pragmas(source: str) -> Dict[int, set]:
+    """``{line: {rule, ...}}`` for every ``# repro: allow=`` pragma.
+
+    A pragma suppresses findings on its own line; when it sits on a
+    comment-only line, it suppresses the *next* line instead (the
+    long-call form). Trailing justification text is ignored."""
+    out: Dict[int, set] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(text)
+        if not m:
+            continue
+        rules = {r for r in m.group(1).split(",") if r}
+        line = i + 1 if text.lstrip().startswith("#") else i
+        out.setdefault(line, set()).update(rules)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# import resolution: canonical dotted names for call targets
+# ---------------------------------------------------------------------------
+
+class ImportMap:
+    """Module-level import aliases, so passes match canonical names
+    (``np.random.default_rng`` -> ``numpy.random.default_rng``) instead
+    of spelling variants."""
+
+    def __init__(self, tree: ast.AST):
+        self.modules: Dict[str, str] = {}           # alias -> dotted module
+        self.names: Dict[str, Tuple[str, str]] = {}  # alias -> (module, attr)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.modules[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    self.names[a.asname or a.name] = (node.module, a.name)
+
+
+def dotted_name(node: ast.AST, imports: Optional[ImportMap] = None
+                ) -> Optional[str]:
+    """Resolve a Name/Attribute chain to its canonical dotted path.
+
+    ``time.perf_counter`` with ``import time as t`` spelled
+    ``t.perf_counter`` resolves to ``"time.perf_counter"``; a bare
+    from-import (``from time import perf_counter``) resolves the same.
+    Chains rooted in anything but a Name (calls, subscripts) return
+    ``None`` — a lint should not guess through dataflow."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    base = node.id
+    parts.reverse()
+    if imports is not None:
+        if base in imports.modules:
+            return ".".join([imports.modules[base]] + parts)
+        if base in imports.names:
+            mod, attr = imports.names[base]
+            return ".".join([mod, attr] + parts)
+    return ".".join([base] + parts)
+
+
+@dataclass
+class ModuleContext:
+    """Everything a pass needs about one file: parsed once, shared."""
+    path: str                      # normalized posix path
+    tree: ast.Module
+    source: str
+    imports: ImportMap
+
+    @classmethod
+    def parse(cls, path: str) -> "ModuleContext":
+        with open(path, encoding="utf-8") as f:
+            source = f.read()
+        tree = ast.parse(source, filename=path)
+        return cls(path=path.replace(os.sep, "/"), tree=tree, source=source,
+                   imports=ImportMap(tree))
+
+
+# ---------------------------------------------------------------------------
+# pass registry
+# ---------------------------------------------------------------------------
+
+class LintPass:
+    """Base class: subclass, set ``name``/``description``/``hint``,
+    implement :meth:`findings`, and decorate with :func:`register`."""
+    name: str = ""
+    description: str = ""
+    hint: str = ""
+
+    def findings(self, ctx: ModuleContext) -> Iterable[Finding]:
+        raise NotImplementedError
+
+    def finding(self, ctx: ModuleContext, node: ast.AST, message: str,
+                hint: Optional[str] = None) -> Finding:
+        return Finding(path=ctx.path, line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), rule=self.name,
+                       message=message,
+                       hint=self.hint if hint is None else hint)
+
+
+_REGISTRY: Dict[str, LintPass] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and index by ``cls.name``."""
+    inst = cls()
+    if not inst.name:
+        raise ValueError(f"{cls.__name__} has no rule name")
+    if inst.name in _REGISTRY:
+        raise ValueError(f"duplicate rule {inst.name!r}")
+    _REGISTRY[inst.name] = inst
+    return cls
+
+
+def all_rules() -> List[LintPass]:
+    """Registered passes, name-sorted (deterministic)."""
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]
+
+
+def get_rule(name: str) -> LintPass:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown rule {name!r}; known: {sorted(_REGISTRY)}")
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def iter_py_files(paths: Sequence[str]) -> List[str]:
+    """Expand files/directories into a sorted, de-duplicated .py list."""
+    out = set()
+    for p in paths:
+        if os.path.isdir(p):
+            for dirpath, dirnames, files in os.walk(p):
+                dirnames.sort()
+                for fn in files:
+                    if fn.endswith(".py"):
+                        out.add(os.path.join(dirpath, fn))
+        elif p.endswith(".py"):
+            out.add(p)
+    return sorted(f.replace(os.sep, "/") for f in out)
+
+
+def _allowlisted(rule: str, path: str) -> bool:
+    return any(path.endswith(sfx) for sfx in ALLOWLIST.get(rule, ()))
+
+
+def run_paths(paths: Sequence[str],
+              rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the selected passes (default: all) over ``paths``; return
+    pragma/allowlist-filtered findings in deterministic order."""
+    passes = ([get_rule(r) for r in rules] if rules is not None
+              else all_rules())
+    findings: List[Finding] = []
+    for path in iter_py_files(paths):
+        ctx = ModuleContext.parse(path)
+        pragmas = parse_pragmas(ctx.source)
+        for p in passes:
+            if _allowlisted(p.name, ctx.path):
+                continue
+            for fd in p.findings(ctx):
+                if p.name in pragmas.get(fd.line, ()):
+                    continue
+                findings.append(fd)
+    return sorted(findings)

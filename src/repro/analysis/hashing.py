@@ -1,0 +1,79 @@
+"""hash-determinism: no PYTHONHASHSEED-dependent enumeration order.
+
+Builtin ``hash()`` of a str/bytes is salted per process
+(PYTHONHASHSEED), and set iteration order follows the hash table — so
+``hash(target) % k`` or ``for t in {...}`` produces *different* slot
+assignments, adapter initializations, or aggregation orders in
+different processes. That exact bug shipped once: the serve example
+seeded per-target adapters with ``hash(t)`` and produced different
+demo adapters per run (fixed in PR 2 by sorted-target enumeration).
+Once edge aggregators run as separate processes, any hash-ordered
+enumeration on the wire path is a silent cross-process divergence.
+
+Flagged:
+
+* any call to builtin ``hash()``;
+* direct iteration over a set display / ``set()`` / ``frozenset()``
+  call — in ``for``, comprehensions, ``enumerate(...)``,
+  ``list(...)``, ``tuple(...)``. Wrapping in ``sorted(...)`` is the
+  fix and is recognized implicitly (the iterable is then the
+  ``sorted`` call, not the set).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from repro.analysis.framework import (Finding, LintPass, ModuleContext,
+                                      dotted_name, register)
+
+#: callables whose first argument is enumerated in order
+_ORDER_SINKS = frozenset({"enumerate", "list", "tuple"})
+
+
+def _is_set_expr(node: ast.AST, ctx: ModuleContext) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func, ctx.imports) in ("set", "frozenset")
+    return False
+
+
+@register
+class HashDeterminism(LintPass):
+    name = "hash-determinism"
+    description = ("builtin hash() and set-iteration order are "
+                   "PYTHONHASHSEED-dependent — they diverge across "
+                   "processes")
+    hint = ("enumerate sorted(...) instead; for a stable digest use "
+            "zlib.crc32 / hashlib on explicit bytes")
+
+    def findings(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func, ctx.imports)
+                if name == "hash":
+                    yield self.finding(
+                        ctx, node,
+                        "builtin hash() is salted per process "
+                        "(PYTHONHASHSEED) — its value is not a wire "
+                        "contract")
+                elif name in _ORDER_SINKS and node.args \
+                        and _is_set_expr(node.args[0], ctx):
+                    yield self.finding(
+                        ctx, node,
+                        f"{name}() over a set enumerates in hash order — "
+                        f"different processes see different orders")
+            else:
+                iters: List[ast.AST] = []
+                if isinstance(node, ast.For):
+                    iters = [node.iter]
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    iters = [g.iter for g in node.generators]
+                for it in iters:
+                    if _is_set_expr(it, ctx):
+                        yield self.finding(
+                            ctx, it,
+                            "iterating a set enumerates in hash order — "
+                            "different processes see different orders")

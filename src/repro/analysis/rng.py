@@ -1,0 +1,105 @@
+"""rng-discipline: all randomness from seed-derived Generator streams.
+
+Federated runs must be replayable event-for-event: cohort sampling,
+client batch picks, rank policies, and synthetic data all draw from
+``np.random.default_rng(seed)`` streams threaded from ``ServerConfig``
+/ ``SimConfig`` seeds (the samplers in ``fed/population.py`` draw
+*only* from the session rng). Three things break that contract:
+
+* the stdlib ``random`` module — one process-global, unseeded stream
+  any import can perturb;
+* global numpy state (``np.random.seed`` / ``np.random.rand`` / ...)
+  — same problem with a numpy accent;
+* a ``default_rng()`` constructed without a seed-derived expression —
+  fresh OS entropy per process, so two edges replaying the same round
+  diverge.
+
+"Seed-derived" is a syntactic check: the seed argument must mention a
+name containing ``seed``/``rng``/``entropy`` (``scfg.seed``,
+``sim.seed + 5``, a ``SeedSequence``), or call
+``core.seeds.derive_seed`` — the named, collision-checked replacement
+for magic ``seed + 555`` offsets. Anything else (no argument, a bare
+literal, an unrelated variable) is flagged.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable
+
+from repro.analysis.framework import (Finding, LintPass, ModuleContext,
+                                      dotted_name, register)
+
+#: numpy.random attributes that do NOT touch global state
+_STATELESS = frozenset({
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "SFC64", "MT19937",
+})
+
+_SEEDISH = re.compile(r"seed|rng|entropy", re.IGNORECASE)
+
+
+def _is_seed_derived(node: ast.AST, ctx: ModuleContext) -> bool:
+    """True when the expression syntactically mentions a seed source."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and _SEEDISH.search(sub.id):
+            return True
+        if isinstance(sub, ast.Attribute) and _SEEDISH.search(sub.attr):
+            return True
+        if isinstance(sub, ast.Call):
+            name = dotted_name(sub.func, ctx.imports) or ""
+            if name.endswith("derive_seed") or "SeedSequence" in name:
+                return True
+    return False
+
+
+@register
+class RngDiscipline(LintPass):
+    name = "rng-discipline"
+    description = ("stdlib random / global numpy RNG state / unseeded "
+                   "default_rng() — randomness must come from "
+                   "seed-derived Generator streams")
+    hint = ("use np.random.default_rng(derive_seed(seed, purpose)) — "
+            "see repro.core.seeds")
+
+    def findings(self, ctx: ModuleContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "random" or a.name.startswith("random."):
+                        yield self.finding(
+                            ctx, node,
+                            "stdlib `random` is one process-global, "
+                            "unseeded stream — not replayable")
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0 and (node.module or "") == "random":
+                    yield self.finding(
+                        ctx, node,
+                        "stdlib `random` is one process-global, "
+                        "unseeded stream — not replayable")
+            elif isinstance(node, ast.Call):
+                name = dotted_name(node.func, ctx.imports) or ""
+                if not name.startswith("numpy.random."):
+                    continue
+                attr = name[len("numpy.random."):].split(".")[0]
+                if attr not in _STATELESS:
+                    yield self.finding(
+                        ctx, node,
+                        f"{name}() mutates/reads numpy's process-global "
+                        f"RNG state")
+                elif attr == "default_rng":
+                    seed_args = list(node.args[:1]) + [
+                        kw.value for kw in node.keywords
+                        if kw.arg == "seed"]
+                    if not seed_args:
+                        yield self.finding(
+                            ctx, node,
+                            "default_rng() without a seed draws fresh OS "
+                            "entropy — replays diverge across processes")
+                    elif not any(_is_seed_derived(a, ctx)
+                                 for a in seed_args):
+                        yield self.finding(
+                            ctx, node,
+                            "default_rng seed is not derived from a "
+                            "named seed — magic constants hide stream "
+                            "collisions")

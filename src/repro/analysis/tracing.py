@@ -1,0 +1,185 @@
+"""host-sync-in-traced-code: jitted hot paths stay retrace-free.
+
+Both engines pin ``trace_count`` flat at runtime — but that witness
+fires *after* the regression ships, on whatever traffic the test
+happens to replay. This pass flags the constructs that force a host
+sync or a retrace at authoring time, inside any function that is
+traced: decorated with ``jax.jit`` (directly or via
+``functools.partial``), or passed to ``jax.jit(...)`` /
+``shard_map(...)`` / ``pl.pallas_call(...)``.
+
+Flagged, when the value flows from a *traced parameter* (a direct
+syntactic reference — the pass does not chase dataflow):
+
+* ``float(x)`` / ``int(x)`` / ``bool(x)`` — concretizes a tracer:
+  ``ConcretizationTypeError`` under jit, or a silent device->host sync
+  + retrace when shapes make it legal;
+* ``x.item()`` / ``x.tolist()`` / ``np.asarray(x)`` / ``np.array(x)``
+  / ``jax.device_get(x)`` — explicit host syncs;
+* ``if``/``while`` whose test contains one of the above — a
+  Python-scalar branch: every distinct value retraces the function
+  (the dense-ring ``pos % slots`` wrap bug was this shape).
+
+Parameters listed in a literal ``static_argnames=`` are exempt — they
+are Python values by contract (``int(block_n)`` in a kernel wrapper is
+fine). Host-side scheduler code around the jitted step is untouched:
+only the traced function bodies are scanned.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.framework import (Finding, LintPass, ModuleContext,
+                                      dotted_name, register)
+
+_CASTS = frozenset({"float", "int", "bool"})
+_SYNC_CALLS = frozenset({"numpy.asarray", "numpy.array", "jax.device_get"})
+_SYNC_METHODS = frozenset({"item", "tolist"})
+_TRACERS = frozenset({"jit", "shard_map", "pallas_call"})
+
+
+def _is_tracer(name: Optional[str]) -> bool:
+    return name is not None and name.split(".")[-1] in _TRACERS
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    """Literal ``static_argnames=`` entries, when statically visible."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, str):
+            out.add(v.value)
+        elif isinstance(v, (ast.Tuple, ast.List)):
+            out.update(e.value for e in v.elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, str))
+    return out
+
+
+def _param_names(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _collect_traced(ctx: ModuleContext):
+    """``[(function_node, static_names), ...]`` for every traced def or
+    lambda in the module. Name/attribute targets of ``jax.jit(f)`` are
+    matched against every same-named def in the module — a lint-grade
+    approximation of scope resolution."""
+    by_name: Dict[str, List] = {}
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+
+    traced: List[Tuple[ast.AST, Set[str]]] = []
+    seen: Set[int] = set()
+
+    def add(fn, static: Set[str]):
+        if id(fn) not in seen:
+            seen.add(id(fn))
+            traced.append((fn, static))
+
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_tracer(dotted_name(dec, ctx.imports)):
+                    add(node, set())
+                elif isinstance(dec, ast.Call):
+                    fn_name = dotted_name(dec.func, ctx.imports) or ""
+                    if _is_tracer(fn_name):
+                        add(node, _static_argnames(dec))
+                    elif fn_name.split(".")[-1] == "partial" and dec.args \
+                            and _is_tracer(dotted_name(dec.args[0],
+                                                       ctx.imports)):
+                        add(node, _static_argnames(dec))
+        elif isinstance(node, ast.Call) and node.args \
+                and _is_tracer(dotted_name(node.func, ctx.imports)):
+            target, static = node.args[0], _static_argnames(node)
+            if isinstance(target, ast.Lambda):
+                add(target, static)
+            else:
+                name = None
+                if isinstance(target, ast.Name):
+                    name = target.id
+                elif isinstance(target, ast.Attribute):
+                    name = target.attr       # jax.jit(self._step_impl)
+                for fn in by_name.get(name, ()):
+                    add(fn, static)
+    return traced
+
+
+@register
+class HostSyncInTracedCode(LintPass):
+    name = "host-sync-in-traced-code"
+    description = ("float()/int()/.item()/np.asarray on traced values "
+                   "and Python-scalar branches inside jit/shard_map/"
+                   "pallas_call functions force host syncs or retraces")
+    hint = ("keep the value on device (jnp ops, lax.cond/select); hoist "
+            "genuinely-static values into static_argnames or close over "
+            "them")
+
+    def findings(self, ctx: ModuleContext) -> Iterable[Finding]:
+        emitted: Set[Tuple[int, int]] = set()
+        for fn, static in _collect_traced(ctx):
+            params = {p for p in _param_names(fn)
+                      if p not in static and p != "self"}
+            if not params:
+                continue
+
+            def refs_param(node) -> bool:
+                return any(isinstance(n, ast.Name) and n.id in params
+                           for n in ast.walk(node))
+
+            def sync_site(node) -> Optional[str]:
+                """Describe the host sync at ``node``, if any."""
+                if not isinstance(node, ast.Call):
+                    return None
+                name = dotted_name(node.func, ctx.imports)
+                if name in _CASTS and node.args \
+                        and refs_param(node.args[0]):
+                    return f"{name}() concretizes a traced value"
+                if name in _SYNC_CALLS and node.args \
+                        and refs_param(node.args[0]):
+                    return f"{name}() pulls a traced value to host"
+                if isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SYNC_METHODS \
+                        and refs_param(node.func.value):
+                    return (f".{node.func.attr}() pulls a traced value "
+                            f"to host")
+                return None
+
+            body = fn.body if isinstance(fn.body, list) else [fn.body]
+            in_branch_test: Set[int] = set()
+            for node in [n for b in body for n in ast.walk(b)]:
+                if isinstance(node, (ast.If, ast.While)):
+                    hits = [sync_site(t) for t in ast.walk(node.test)]
+                    hits = [h for h in hits if h]
+                    if hits:
+                        in_branch_test.update(
+                            id(t) for t in ast.walk(node.test))
+                        key = (node.lineno, node.col_offset)
+                        if key not in emitted:
+                            emitted.add(key)
+                            yield self.finding(
+                                ctx, node,
+                                f"Python-scalar branch on a traced value "
+                                f"({hits[0]}) — every distinct value "
+                                f"retraces")
+            for node in [n for b in body for n in ast.walk(b)]:
+                if id(node) in in_branch_test:
+                    continue
+                msg = sync_site(node)
+                if msg:
+                    key = (node.lineno, node.col_offset)
+                    if key not in emitted:
+                        emitted.add(key)
+                        yield self.finding(
+                            ctx, node, f"{msg} inside traced code")

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.util import atomic_write_json
+
 _BF16_TAG = "__bf16__"
 _BYTES_TAG = "__bytes__"
 
@@ -76,8 +78,11 @@ def save(ckpt_dir: str, step: int, tree, meta: Optional[dict] = None) -> str:
     d = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(d, exist_ok=True)
     save_pytree(os.path.join(d, "arrays.npz"), tree)
-    with open(os.path.join(d, "meta.json"), "w") as f:
-        json.dump({"step": step, **(meta or {})}, f)
+    # meta.json is the restore-side source of truth (rng state, ranks):
+    # swap it in atomically so a reader racing `latest_step` never loads
+    # a torn file
+    atomic_write_json(os.path.join(d, "meta.json"),
+                      {"step": step, **(meta or {})})
     return d
 
 

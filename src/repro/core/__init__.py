@@ -1,8 +1,9 @@
 """HLoRA core: LoRA adapters with heterogeneous ranks, server aggregation
 (naive / zero-pad / HLoRA reconstruct+SVD), the batched jit-cached
-aggregation engine, rank policies."""
-from repro.core import agg_engine, aggregate, lora, rank, svd
+aggregation engine, rank policies, named seed derivation."""
+from repro.core import agg_engine, aggregate, lora, rank, seeds, svd
 from repro.core.agg_engine import AggregationEngine, default_engine
+from repro.core.seeds import derive_seed
 
-__all__ = ["agg_engine", "aggregate", "lora", "rank", "svd",
-           "AggregationEngine", "default_engine"]
+__all__ = ["agg_engine", "aggregate", "lora", "rank", "seeds", "svd",
+           "AggregationEngine", "default_engine", "derive_seed"]

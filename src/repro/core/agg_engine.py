@@ -103,8 +103,12 @@ def _probe_recon_backend(kc: int, d_in: int, r: int, d_out: int,
 
     def timed(fn) -> float:
         fn(a, b, eta).block_until_ready()      # compile + warm
-        t0 = time.perf_counter()
+        # the autotune probe is a genuine one-shot timing measurement:
+        # its result picks a backend and is never recorded as an event,
+        # so it deliberately bypasses the Recorder clock
+        t0 = time.perf_counter()  # repro: allow=clock-discipline (autotune)
         fn(a, b, eta).block_until_ready()
+        # repro: allow=clock-discipline (autotune probe)
         return time.perf_counter() - t0
 
     try:

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.seeds import derive_seed
 from repro.data import (client_batches, dirichlet_partition,
                         make_pair_classification)
 from repro.fed.client import (join_adapters, make_cohort_train,
@@ -68,7 +69,8 @@ def pretrain_backbone(cfg: ModelConfig, sim: SimConfig):
         return _PRETRAIN_STORE[key]
     params = model_lib.init_params(jax.random.PRNGKey(sim.seed), cfg)
     if sim.pretrain_steps > 0:
-        rng = np.random.default_rng(sim.seed + 555)
+        rng = np.random.default_rng(
+            derive_seed(sim.seed, "pretrain-batches"))
         # Pretrain ONLY on the easy lexical-overlap task (qqp stand-in):
         # the federated phase must then genuinely adapt the representation
         # to the harder shuffled/noised tasks — the domain gap that makes
@@ -134,7 +136,8 @@ def make_experiment_setup(cfg: ModelConfig, sim: SimConfig,
     def data_fn(cohort, rnd):
         return _stack_client_data(tokens, labels, shards, cohort, sim, rnd)
 
-    rng = np.random.default_rng(sim.seed + 4242)
+    rng = np.random.default_rng(
+        derive_seed(sim.seed, "async-client-batches"))
 
     def client_data_fn(cid):          # async mode: one client's batches
         picks = rng.integers(0, len(shards[cid]),

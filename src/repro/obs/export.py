@@ -28,9 +28,11 @@ Three formats, one source of truth (``Recorder.events()``):
   returned counts include ``"dropped"`` from the truncation metadata
   row (0 when absent), so callers can refuse partial timelines.
 
-All file writes go through tmp + ``os.replace`` (the same atomicity
-contract ``benchmarks/run.py`` pins for its results json): a crashed or
-interrupted export never leaves a half-written trace behind.
+All file writes go through ``repro.util.atomic_write_text`` (tmp +
+``os.replace`` — the same atomicity contract ``benchmarks/run.py`` pins
+for its results json, now enforced tree-wide by the ``atomic-write``
+pass in :mod:`repro.analysis`): a crashed or interrupted export never
+leaves a half-written trace behind.
 """
 from __future__ import annotations
 
@@ -39,6 +41,7 @@ import os
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.obs.recorder import Event
+from repro.util import atomic_write_text as _atomic_write_text
 
 _US = 1e6
 _PID = 1
@@ -46,17 +49,6 @@ _PID = 1
 _OVERLAP_EPS_US = 0.5
 #: name of the "M" metadata row that surfaces ring truncation
 DROPPED_META_NAME = "recorder_dropped"
-
-
-def _atomic_write_text(path: str, text: str) -> None:
-    """tmp + ``os.replace``: readers never observe a partial file."""
-    d = os.path.dirname(path)
-    if d:
-        os.makedirs(d, exist_ok=True)
-    tmp = f"{path}.tmp.{os.getpid()}"
-    with open(tmp, "w") as f:
-        f.write(text)
-    os.replace(tmp, path)
 
 
 # ---------------------------------------------------------------------------

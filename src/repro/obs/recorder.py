@@ -3,9 +3,10 @@
 One ``Recorder`` instance is the single timeline for everything a process
 does — serving steps, federated rounds, page churn, wire traffic — so a
 Chrome-trace export lines every subsystem up against one monotonic clock
-instead of each bench keeping its own ``perf_counter`` deltas (a tier-1
-lint forbids raw ``time.perf_counter()`` inside ``src/repro/serve`` and
-``src/repro/fed``; this module is the one place that touches the clock).
+instead of each bench keeping its own ``time.perf_counter()`` deltas.
+The ``clock-discipline`` pass in :mod:`repro.analysis` (tier-1) flags
+real raw-clock *call sites* anywhere in ``src/repro`` — this file is
+the allowlisted clock owner, the one place that touches ``time``.
 
 Design constraints, in order:
 

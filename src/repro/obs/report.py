@@ -22,8 +22,9 @@ Writes are atomic (tmp + ``os.replace``), like every exporter here.
 from __future__ import annotations
 
 import html as _html
-import os
 from typing import List, Optional, Sequence
+
+from repro.util import atomic_write_text
 
 _CSS = """
 body { font-family: ui-monospace, Menlo, Consolas, monospace;
@@ -165,13 +166,7 @@ def write_html(path: str, title: str = "repro ops report", store=None,
     """Render + atomic write; returns ``path``."""
     text = render_html(title=title, store=store, slo=slo,
                        metrics=metrics, dropped=dropped)
-    d = os.path.dirname(path)
-    if d:
-        os.makedirs(d, exist_ok=True)
-    tmp = f"{path}.tmp.{os.getpid()}"
-    with open(tmp, "w") as f:
-        f.write(text)
-    os.replace(tmp, path)
+    atomic_write_text(path, text)
     return path
 
 

@@ -1,0 +1,373 @@
+"""repro.analysis: the invariant lint suite linting itself.
+
+Fixture snippets per rule (known-bad fires, known-good passes, pragma
+suppresses, allowlist honored), finding-order determinism, the
+derive_seed helper's contract, and the CLI exit codes. The full-tree
+"src/repro is clean" pin lives in test_system.py next to the other
+whole-system guards.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import (ALLOWLIST, all_rules, get_rule, parse_pragmas,
+                            run_paths)
+from repro.core.seeds import derive_seed
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def lint(tmp_path, source, rules=None, name="snippet.py"):
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return run_paths([str(p)], rules=rules)
+
+
+# ---------------------------------------------------------------------------
+# per-rule fixtures: known-bad triggers, known-good passes
+# ---------------------------------------------------------------------------
+
+# rule -> (bad snippet, line the finding anchors to, good snippet).
+# The good snippet is the *fixed* version of the same intent.
+RULE_FIXTURES = {
+    "clock-discipline": (
+        """
+        import time
+
+        def stamp():
+            return time.time()
+        """, 5,
+        """
+        def stamp(rec):
+            '''Docstrings may say time.time() or time.perf_counter()
+            freely now — only real calls count.'''
+            return rec.now()
+        """),
+    "rng-discipline": (
+        """
+        import numpy as np
+
+        rng = np.random.default_rng()
+        """, 4,
+        """
+        import numpy as np
+        from repro.core.seeds import derive_seed
+
+        def make(seed):
+            a = np.random.default_rng(seed)
+            b = np.random.default_rng(derive_seed(7, "fixture-stream"))
+            c = np.random.default_rng(np.random.SeedSequence([1, 2]))
+            return a, b, c
+        """),
+    "hash-determinism": (
+        """
+        def slot(target):
+            return hash(target) % 8
+        """, 3,
+        """
+        import zlib
+
+        def slot(target):
+            return zlib.crc32(target.encode()) % 8
+
+        def targets(lora):
+            for t in sorted({k for k in lora}):
+                yield t
+        """),
+    "host-sync-in-traced-code": (
+        """
+        import jax
+
+        @jax.jit
+        def step(x):
+            return float(x) + 1.0
+        """, 6,
+        """
+        import functools
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            return jnp.float32(x) + 1.0
+
+        @functools.partial(jax.jit, static_argnames=("block_n",))
+        def kernel(x, block_n):
+            return x * int(block_n)      # static by contract: exempt
+        """),
+    "atomic-write": (
+        """
+        import json
+
+        def dump(history):
+            with open("results/history.json", "w") as f:
+                json.dump(history, f)
+        """, 5,
+        """
+        import json
+        import os
+
+        def dump(history, path):
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                json.dump(history, f)
+            os.replace(tmp, path)
+
+        def append(line, path):
+            with open(path, "a") as f:   # append streams are exempt
+                f.write(line)
+        """),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_rule_fires_on_known_bad(tmp_path, rule):
+    bad, line, _ = RULE_FIXTURES[rule]
+    findings = lint(tmp_path, bad, rules=[rule])
+    assert findings, f"{rule} did not fire on its known-bad fixture"
+    assert all(f.rule == rule for f in findings)
+    assert findings[0].line == line
+    assert findings[0].hint       # every rule ships a fix hint
+
+
+@pytest.mark.parametrize("rule", sorted(RULE_FIXTURES))
+def test_rule_passes_on_known_good(tmp_path, rule):
+    _, _, good = RULE_FIXTURES[rule]
+    assert lint(tmp_path, good, rules=[rule]) == []
+
+
+def test_every_registered_rule_has_a_fixture():
+    """A new pass without fixtures (or a dead registration) fails here —
+    the acceptance criterion that each rule is *demonstrated* to fire."""
+    assert {p.name for p in all_rules()} == set(RULE_FIXTURES)
+    assert len(all_rules()) >= 5
+
+
+# ---------------------------------------------------------------------------
+# suppression: pragmas + allowlist
+# ---------------------------------------------------------------------------
+
+def test_pragma_suppresses_same_line(tmp_path):
+    src = """
+    import time
+
+    def stamp():
+        return time.time()  # repro: allow=clock-discipline (fixture)
+    """
+    assert lint(tmp_path, src, rules=["clock-discipline"]) == []
+
+
+def test_pragma_on_preceding_comment_line(tmp_path):
+    src = """
+    import time
+
+    def stamp():
+        # repro: allow=clock-discipline (the long-call form)
+        return time.time()
+    """
+    assert lint(tmp_path, src, rules=["clock-discipline"]) == []
+
+
+def test_pragma_for_other_rule_does_not_suppress(tmp_path):
+    src = """
+    import time
+
+    def stamp():
+        return time.time()  # repro: allow=atomic-write (wrong rule)
+    """
+    assert len(lint(tmp_path, src, rules=["clock-discipline"])) == 1
+
+
+def test_pragma_multiple_rules_and_justification(tmp_path):
+    src = """
+    import time
+
+    def seed_and_stamp():
+        # repro: allow=clock-discipline,rng-discipline (both sanctioned)
+        return time.time()
+    """
+    assert lint(tmp_path, src) == []
+    assert parse_pragmas("x = 1  # repro: allow=a-b,c-d why") \
+        == {1: {"a-b", "c-d"}}
+
+
+def test_allowlist_honored_by_path_suffix(tmp_path):
+    assert "obs/recorder.py" in ALLOWLIST["clock-discipline"]
+    src = "import time\nt = time.perf_counter()\n"
+    bad = lint(tmp_path, src, rules=["clock-discipline"],
+               name="obs/other.py")
+    ok = lint(tmp_path, src, rules=["clock-discipline"],
+              name="obs/recorder.py")
+    assert len(bad) == 1 and ok == []
+
+
+# ---------------------------------------------------------------------------
+# rule-specific edges
+# ---------------------------------------------------------------------------
+
+def test_clock_matches_aliased_imports_not_docstrings(tmp_path):
+    src = """
+    import time as _t
+    from time import perf_counter
+
+    def f():
+        'mentioning time.time() in a docstring is fine'
+        return _t.monotonic() + perf_counter()
+    """
+    findings = lint(tmp_path, src, rules=["clock-discipline"])
+    assert len(findings) == 2     # both real calls, zero docstring hits
+
+
+def test_rng_flags_global_state_and_magic_literal(tmp_path):
+    src = """
+    import numpy as np
+
+    np.random.seed(0)
+    a = np.random.default_rng(12345)
+    b = np.random.default_rng(seed=None)
+    """
+    findings = lint(tmp_path, src, rules=["rng-discipline"])
+    assert [f.line for f in findings] == [4, 5, 6]
+
+
+def test_hash_set_iteration_variants(tmp_path):
+    src = """
+    def f(keys):
+        out = [k for k in {"a", "b"}]
+        for pair in enumerate({"x", "y"}):
+            out.append(pair)
+        good = sorted({"a", "b"})        # sorted() launders the order
+        also = {k: 1 for k in sorted(set(keys))}
+        return out, good, also
+    """
+    findings = lint(tmp_path, src, rules=["hash-determinism"])
+    assert len(findings) == 2 and {f.line for f in findings} == {3, 4}
+
+
+def test_tracing_branch_and_called_by_name(tmp_path):
+    src = """
+    import jax
+
+    def impl(state, tokens):
+        if state.sum().item() > 0:
+            return tokens
+        return tokens + 1
+
+    step = jax.jit(impl)
+    """
+    findings = lint(tmp_path, src, rules=["host-sync-in-traced-code"])
+    assert len(findings) == 1 and findings[0].line == 5
+    assert "retrace" in findings[0].message
+
+
+def test_tracing_ignores_host_side_code(tmp_path):
+    src = """
+    import jax
+
+    def scheduler(batch):          # never traced: host-side is free
+        n = int(batch.num_rows)
+        return float(n)
+    """
+    assert lint(tmp_path, src, rules=["host-sync-in-traced-code"]) == []
+
+
+def test_atomic_write_flags_wb_and_accepts_helper_shape(tmp_path):
+    src = """
+    def raw(path, blob):
+        with open(path, mode="wb") as f:
+            f.write(blob)
+    """
+    findings = lint(tmp_path, src, rules=["atomic-write"])
+    assert len(findings) == 1 and '"wb"' in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# determinism + derive_seed
+# ---------------------------------------------------------------------------
+
+def test_finding_order_deterministic_under_path_shuffle(tmp_path):
+    files = {}
+    for name in ("zz.py", "aa.py", "mm.py"):
+        p = tmp_path / name
+        p.write_text("import time\na = time.time()\nb = time.time()\n")
+        files[name] = str(p)
+    order1 = run_paths([files["zz.py"], files["aa.py"], files["mm.py"]])
+    order2 = run_paths([files["mm.py"], files["zz.py"], files["aa.py"]])
+    order3 = run_paths([str(tmp_path)])
+    assert order1 == order2 == order3
+    keys = [(f.path, f.line, f.col, f.rule) for f in order1]
+    assert keys == sorted(keys) and len(keys) == 6
+
+
+def test_derive_seed_contract():
+    """Deterministic, purpose-independent streams: same (seed, purpose)
+    -> same value; different purposes / seeds -> different values; the
+    result fits both default_rng and PRNGKey."""
+    a = derive_seed(0, "pretrain-batches")
+    assert a == derive_seed(0, "pretrain-batches")
+    assert a != derive_seed(0, "async-client-batches")
+    assert a != derive_seed(1, "pretrain-batches")
+    vals = {derive_seed(s, p) for s in range(8)
+            for p in ("a", "b", "c", "d")}
+    assert len(vals) == 32            # no collisions on a small grid
+    assert all(0 <= v < 2 ** 32 for v in vals)
+    # cross-process stability (crc32 + SeedSequence are specified
+    # algorithms — unlike builtin hash(), which this helper replaces)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.core.seeds import derive_seed;"
+         "print(derive_seed(0, 'pretrain-batches'))"],
+        capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC,
+             "PYTHONHASHSEED": "12345"})
+    assert out.returncode == 0, out.stderr
+    assert int(out.stdout.strip()) == a
+
+
+def test_unknown_rule_raises():
+    with pytest.raises(KeyError, match="unknown rule"):
+        get_rule("no-such-rule")
+    with pytest.raises(KeyError, match="unknown rule"):
+        run_paths([SRC], rules=["no-such-rule"])
+
+
+# ---------------------------------------------------------------------------
+# CLI: exit codes + output
+# ---------------------------------------------------------------------------
+
+def _cli(*args, cwd=None):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, cwd=cwd,
+        env={**os.environ,
+             "PYTHONPATH": SRC + os.pathsep
+             + os.environ.get("PYTHONPATH", "")})
+
+
+def test_cli_list_and_exit_codes(tmp_path):
+    ls = _cli("--list")
+    assert ls.returncode == 0
+    rules = [l.split(" — ")[0] for l in ls.stdout.splitlines() if l.strip()]
+    assert set(rules) == {p.name for p in all_rules()} and len(rules) >= 5
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\nt = time.time()\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+
+    r_bad = _cli(str(bad))
+    assert r_bad.returncode == 1
+    assert "[clock-discipline]" in r_bad.stdout and "fix:" in r_bad.stdout
+    r_good = _cli(str(good))
+    assert r_good.returncode == 0 and "clean" in r_good.stdout
+    # --rule filters: the clock finding is invisible to atomic-write
+    assert _cli("--rule", "atomic-write", str(bad)).returncode == 0
+    assert _cli("--rule", "clock-discipline", str(bad)).returncode == 1
+    # usage errors are rc=2 (argparse): no paths / unknown rule
+    assert _cli().returncode == 2
+    assert _cli("--rule", "nope", str(good)).returncode != 0
